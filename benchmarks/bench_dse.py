@@ -1,0 +1,98 @@
+"""Paper Figs. 1 & 8 (ResNet-18 × Edge TPU) and Fig. 9 (GPT-2 × FuseMax):
+hardware DSE for inference vs training — the landscapes differ structurally.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (EDGE_TPU_SPACE, FUSEMAX_SPACE, build_training_graph,
+                        compute_resource, edge_tpu, fusemax, gpt2_graph,
+                        pareto_front, resnet18_graph, spread, sweep)
+
+from .common import dump, dump_json, emit, timed
+
+
+def _landscape(points, wname):
+    lat = [p.results[wname].latency for p in points]
+    en = [p.results[wname].energy for p in points]
+    front = pareto_front(points, [lambda p: p.results[wname].latency,
+                                  lambda p: p.results[wname].energy])
+    return dict(lat=spread(lat), energy=spread(en),
+                front={id(p): p.config for p in front}, n_front=len(front))
+
+
+def run_fig1_fig8(sample: int = 120, seed: int = 0):
+    fwd = resnet18_graph(1, 32)
+    tg = build_training_graph(fwd, "adam").graph
+    points, us = timed(sweep, edge_tpu, EDGE_TPU_SPACE,
+                       {"inf": fwd, "train": tg}, sample, seed)
+
+    rows = []
+    for p in points:
+        r = p.row()
+        r["compute_resource"] = compute_resource(p.config)
+        rows.append(r)
+    dump("fig1_fig8_resnet_edgetpu", rows)
+
+    li = _landscape(points, "inf")
+    lt = _landscape(points, "train")
+    fi = {frozenset(c.items()) for c in li["front"].values()}
+    ft = {frozenset(c.items()) for c in lt["front"].values()}
+    overlap = len(fi & ft) / max(len(fi | ft), 1)
+
+    # paper Fig. 8 claim: large PEs on the inference latency front but not
+    # on the training latency front
+    def pe_size(cfg):
+        return cfg["simd_units"] * 4 * cfg["lanes"]
+    big_pe_inf = max((pe_size(c) for c in li["front"].values()), default=0)
+    big_pe_tr = max((pe_size(c) for c in lt["front"].values()), default=0)
+
+    derived = (f"pareto_overlap={overlap:.2f};"
+               f"max_PE_on_inf_front={big_pe_inf};"
+               f"max_PE_on_train_front={big_pe_tr};"
+               f"train/inf_median_lat="
+               f"{lt['lat']['median'] / li['lat']['median']:.1f}")
+    emit("fig1_fig8_resnet_edgetpu_dse", us / max(len(points), 1), derived)
+    dump_json("fig1_fig8_summary", dict(inference=li, training=lt,
+                                        pareto_overlap=overlap))
+    return dict(overlap=overlap, points=len(points))
+
+
+def run_fig9(sample: int = 60, seed: int = 1):
+    g = gpt2_graph(1, 256, 768, 4, 12, 50257)
+    tg = build_training_graph(g, "adam").graph
+    points, us = timed(sweep, fusemax, FUSEMAX_SPACE,
+                       {"inf": g, "train": tg}, sample, seed)
+    rows = [dict(p.row(), bw=p.config["buffer_bw"]) for p in points]
+    dump("fig9_gpt2_fusemax", rows)
+
+    li, lt = _landscape(points, "inf"), _landscape(points, "train")
+    # concentration claim: GPT-2/FuseMax landscape is tighter than
+    # ResNet/EdgeTPU (compare rel IQR with fig8 run)
+    derived = (f"rel_iqr_inf={li['lat']['rel_iqr']:.2f};"
+               f"rel_iqr_train={lt['lat']['rel_iqr']:.2f};"
+               f"bw_sensitivity={_bw_sensitivity(points):.2f}")
+    emit("fig9_gpt2_fusemax_dse", us / max(len(points), 1), derived)
+    dump_json("fig9_summary", dict(inference=li, training=lt))
+    return dict(rel_iqr_train=lt["lat"]["rel_iqr"])
+
+
+def _bw_sensitivity(points) -> float:
+    """median latency(low bw) / median latency(high bw) for training."""
+    lo = [p.results["train"].latency for p in points
+          if p.config["buffer_bw"] == 8192]
+    hi = [p.results["train"].latency for p in points
+          if p.config["buffer_bw"] == 16384]
+    if not lo or not hi:
+        return 1.0
+    return float(np.median(lo) / np.median(hi))
+
+
+def main():
+    run_fig1_fig8()
+    run_fig9()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Fig. 10: layer-fusion strategies on ResNet-18 / Edge TPU —
+layer-by-layer vs manual vs the IP solver at subgraph limits 4/6/8.
+Also the training-graph extension (paper §V-A motivation)."""
+
+from __future__ import annotations
+
+from repro.core import (FusionConfig, build_training_graph, edge_tpu,
+                        layer_by_layer, manual_fusion, resnet18_graph,
+                        schedule, solve_fusion)
+
+from .common import dump, emit, timed
+
+
+def run(time_limit: float = 8.0):
+    hda = edge_tpu()
+    g = resnet18_graph(1, 32)
+    rows = []
+
+    strategies = {"base": layer_by_layer(g), "manual": manual_fusion(g)}
+    solver_us = {}
+    for lim in (4, 6, 8):
+        part, us = timed(solve_fusion, g, hda,
+                         FusionConfig(max_len=lim, time_limit_s=time_limit))
+        strategies[f"limit{lim}"] = part
+        solver_us[f"limit{lim}"] = us
+
+    base = schedule(g, hda, strategies["base"])
+    for name, part in strategies.items():
+        r = schedule(g, hda, part)
+        rows.append(dict(strategy=name, latency=r.latency, energy=r.energy,
+                         n_subgraphs=r.n_subgraphs,
+                         lat_vs_base=r.latency / base.latency,
+                         energy_vs_base=r.energy / base.energy))
+
+    # training-graph fusion (the paper's point: graphs are several× bigger)
+    tg = build_training_graph(g, "adam").graph
+    tpart, tus = timed(solve_fusion, tg, hda,
+                       FusionConfig(max_len=6, time_limit_s=time_limit))
+    tb = schedule(tg, hda)
+    tf = schedule(tg, hda, tpart)
+    rows.append(dict(strategy="train_base", latency=tb.latency,
+                     energy=tb.energy, n_subgraphs=tb.n_subgraphs,
+                     lat_vs_base=1.0, energy_vs_base=1.0))
+    rows.append(dict(strategy="train_limit6", latency=tf.latency,
+                     energy=tf.energy, n_subgraphs=tf.n_subgraphs,
+                     lat_vs_base=tf.latency / tb.latency,
+                     energy_vs_base=tf.energy / tb.energy))
+    dump("fig10_fusion", rows)
+
+    best = min((r for r in rows if r["strategy"].startswith("limit")),
+               key=lambda r: r["latency"])
+    manual = next(r for r in rows if r["strategy"] == "manual")
+    derived = (f"best={best['strategy']};"
+               f"best_lat_vs_base={best['lat_vs_base']:.3f};"
+               f"best_vs_manual={best['latency'] / manual['latency']:.3f};"
+               f"train_limit6_lat_vs_base={rows[-1]['lat_vs_base']:.3f}")
+    emit("fig10_fusion_strategies", solver_us.get("limit6", 0.0), derived)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Table I (capability matrix) + the §V-A training-graph scale claim
+(N≈500 for ResNet-18) + front-end timings."""
+
+from __future__ import annotations
+
+from repro.core import (build_training_graph, gpt2_graph, resnet18_graph,
+                        trace_fn)
+
+from .common import dump, emit, timed
+
+
+def run_table1():
+    rows = [
+        dict(framework="Timeloop+Accelergy", training="No",
+             granularity="Operator", target="DA"),
+        dict(framework="ZigZag", training="No", granularity="Operator",
+             target="DA"),
+        dict(framework="Dace-AD", training="Fwd+Bwd", granularity="Operator",
+             target="CPU,GPU"),
+        dict(framework="Stream", training="No",
+             granularity="Fine-grained fusion", target="HDA"),
+        dict(framework="NVArchSim", training="Yes", granularity="Warp",
+             target="GPU"),
+        dict(framework="MONET(this repo)", training="Yes (fwd+bwd+opt)",
+             granularity="Fine-grained fusion", target="HDA + TPU pods"),
+    ]
+    dump("table1_capabilities", rows)
+    emit("table1_capabilities", 0.0,
+         "training=fwd+bwd+opt;granularity=fine_fusion;target=HDA")
+    return rows
+
+
+def run_training_graph_scale():
+    g, us_fwd = timed(resnet18_graph, 1, 32)
+    tg, us_tr = timed(build_training_graph, g, "adam")
+    n_fwd, n_tr = len(g), len(tg.graph)
+    emit("training_graph_resnet18", us_tr,
+         f"fwd_nodes={n_fwd};train_nodes={n_tr};"
+         f"paper_regime=approx500;activations={len(tg.activations)}")
+
+    g2, _ = timed(gpt2_graph, 1, 256, 768, 12, 12)
+    tg2, us2 = timed(build_training_graph, g2, "adam")
+    emit("training_graph_gpt2", us2,
+         f"fwd_nodes={len(g2)};train_nodes={len(tg2.graph)};"
+         f"activations={len(tg2.activations)}")
+
+    rows = [dict(model="resnet18_b1_32", fwd=n_fwd, train=n_tr,
+                 activations=len(tg.activations)),
+            dict(model="gpt2_small", fwd=len(g2), train=len(tg2.graph),
+                 activations=len(tg2.activations))]
+    dump("training_graph_scale", rows)
+    return rows
+
+
+def run_trace_timing():
+    import jax.numpy as jnp
+
+    def f(w, x):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    g, us = timed(trace_fn, f, jnp.ones((64, 64)), jnp.ones((8, 64)))
+    emit("jaxpr_trace_mlp", us, f"nodes={len(g)}")
+    return g
+
+
+def main():
+    run_table1()
+    run_training_graph_scale()
+    run_trace_timing()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: timing + CSV emission + artifact dump."""
+
+from __future__ import annotations
+
+import csv
+import json
+import os
+import time
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def dump(name: str, rows: list) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.csv")
+    if rows:
+        keys = sorted({k for r in rows for k in r})
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def dump_json(name: str, obj) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path

@@ -1,0 +1,60 @@
+"""Benchmark harness: one entry per paper table/figure (+ roofline).
+
+Prints ``name,us_per_call,derived`` CSV rows; artifacts land in artifacts/.
+
+  python -m benchmarks.run              # everything (roofline w/o recon)
+  python -m benchmarks.run --fast       # trimmed sweeps for CI
+  ROOFLINE_RECONSTRUCT=1 python -m benchmarks.run --only roofline
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks import (bench_checkpointing, bench_dse, bench_fusion,
+                        bench_misc)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    want = lambda n: not args.only or args.only == n
+
+    if want("table1"):
+        bench_misc.run_table1()
+    if want("training_graph"):
+        bench_misc.run_training_graph_scale()
+        bench_misc.run_trace_timing()
+    if want("fig1_fig8"):
+        bench_dse.run_fig1_fig8(sample=40 if args.fast else 120)
+    if want("fig9"):
+        bench_dse.run_fig9(sample=24 if args.fast else 60)
+    if want("fig10"):
+        bench_fusion.run(time_limit=3.0 if args.fast else 8.0)
+    if want("fig11"):
+        bench_checkpointing.run_fig11()
+    if want("fig12"):
+        bench_checkpointing.run_fig12(pop=8 if args.fast else 16,
+                                      gens=4 if args.fast else 10)
+    if want("milp_vs_ga"):
+        bench_checkpointing.run_milp_vs_ga()
+    if want("arch_monet") and not args.fast:
+        from benchmarks import bench_arch_monet
+        bench_arch_monet.main()
+    if want("roofline"):
+        from benchmarks import roofline
+        try:
+            roofline.main()
+        except Exception as e:  # dry-run artifacts may not exist yet
+            print(f"roofline,0.0,skipped({type(e).__name__}: {e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Batched serving example: prefill a batch of prompts through the decode
+path, then greedy-decode continuation tokens against the KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-1b --tokens 16
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import init_cache, init_params
+from repro.training.train_step import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = args.prompt_len + args.tokens
+    cache = init_cache(cfg, args.batch, max_seq)
+    serve = jax.jit(make_serve_step(cfg))
+
+    rng = np.random.default_rng(0)
+    if cfg.input_mode == "tokens":
+        prompts = rng.integers(1, cfg.vocab, (args.batch, args.prompt_len))
+        tok = lambda t: jnp.asarray(t, jnp.int32).reshape(args.batch, 1)
+    else:
+        prompts = rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)
+        tok = lambda t: jnp.asarray(t, jnp.bfloat16).reshape(
+            args.batch, 1, cfg.d_model)
+
+    # prefill token-by-token through the decode path (fills the KV cache)
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        nxt, cache = serve(params, cache, tok(prompts[:, t]), jnp.int32(t))
+    prefill_s = time.time() - t0
+
+    # greedy decode
+    out = [np.asarray(nxt)]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        if cfg.input_mode == "tokens":
+            inp = tok(out[-1])
+        else:  # embedding-input archs feed frame embeddings (stub frontend)
+            inp = tok(rng.standard_normal((args.batch, cfg.d_model)))
+        nxt, cache = serve(params, cache, inp, pos)
+        out.append(np.asarray(nxt))
+    decode_s = time.time() - t0
+
+    seqs = np.stack(out, axis=1)
+    print(f"arch={cfg.name}  batch={args.batch}")
+    print(f"prefill: {args.prompt_len} steps in {prefill_s:.2f}s")
+    print(f"decode : {args.tokens} tokens in {decode_s:.2f}s "
+          f"({args.tokens * args.batch / max(decode_s, 1e-9):.1f} tok/s)")
+    print("generated token ids (first row):", seqs[0][:12])
+
+
+if __name__ == "__main__":
+    main()

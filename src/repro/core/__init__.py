@@ -1,0 +1,36 @@
+"""MONET core: training-aware modeling & optimization of DNN workloads on
+heterogeneous dataflow accelerators (the paper's primary contribution).
+
+Layers:
+  graph / builders / zoo      — workload IR + forward-graph front-ends
+  training_transform          — fwd → fwd+bwd+optimizer graph pass
+  trace                       — jaxpr → IR ingestion (JAX-native front-end)
+  accelerators / cost_model / scheduling — HDA performance & energy model
+  fusion                      — constraint-based layer-fusion IP solver
+  checkpointing / nsga2       — activation-checkpointing GA (+MILP baseline)
+  dse                         — hardware design-space sweeps
+  remat_policy                — MONET decision → real jax.checkpoint policy
+"""
+
+from .accelerators import (EDGE_TPU_SPACE, FUSEMAX_SPACE, TPU_V5E, CoreSpec,
+                           HDASpec, MemLevel, edge_tpu, fusemax, grid,
+                           tpu_v5e_like)
+from .builders import GraphBuilder
+from .checkpointing import (ACResult, ACSolution, activation_set,
+                            apply_checkpointing, evaluate_checkpointing,
+                            ga_checkpointing, knapsack_baseline,
+                            recompute_flops, stored_activation_bytes)
+from .cost_model import CostModel, NodeCost
+from .dse import DSEPoint, compute_resource, pareto_front, spread, sweep
+from .fusion import (FusionConfig, enumerate_candidates, layer_by_layer,
+                     manual_fusion, solve_cover, solve_fusion)
+from .graph import GraphError, Node, TensorSpec, WorkloadGraph
+from .nsga2 import NSGA2Result, crowding_distance, fast_non_dominated_sort, nsga2
+from .remat_policy import keepset_to_policy, policy_from_keep, resolve_remat
+from .scheduling import ScheduleResult, quotient_dag, schedule
+from .trace import trace_fn, trace_model
+from .training_transform import (OPTIMIZERS, TrainingGraph,
+                                 build_training_graph)
+from .zoo import gpt2_graph, mlp_graph, resnet18_graph
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,199 @@
+"""Forward-graph builder DSL.
+
+Thin layer-level helpers that append operator nodes to a
+:class:`~repro.core.graph.WorkloadGraph`.  Used by the paper case-study models
+(ResNet-18, small GPT-2) and by tests; real JAX models are instead ingested
+through :mod:`repro.core.trace`.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .graph import Node, TensorSpec, WorkloadGraph, conv_flops, gemm_flops
+
+
+class GraphBuilder:
+    def __init__(self, name: str = "model", dtype: str = "bfloat16"):
+        self.g = WorkloadGraph(name)
+        self.dtype = dtype
+        self._n = 0
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _uid(self, prefix: str) -> str:
+        self._n += 1
+        return f"{prefix}{self._n}"
+
+    def _t(self, name: str, shape, dtype=None, **kw) -> str:
+        return self.g.tensor(name, tuple(shape), dtype or self.dtype, **kw)
+
+    def shape(self, t: str) -> tuple[int, ...]:
+        return self.g.tensors[t].shape
+
+    def input(self, name: str, shape, dtype=None) -> str:
+        return self._t(name, shape, dtype, is_input=True)
+
+    def param(self, name: str, shape, dtype=None) -> str:
+        return self._t(name, shape, dtype, is_param=True)
+
+    def _node(self, op: str, inputs, outputs, dims=None, flops=0, name=None,
+              kind="fwd", meta=None) -> str:
+        nm = name or self._uid(op + "_")
+        self.g.add_node(Node(nm, op, kind, dims or {}, list(inputs),
+                             list(outputs), int(flops), meta=meta or {}))
+        return nm
+
+    # -- convolution / linear ------------------------------------------------
+
+    def conv(self, x: str, k: int, kernel: int = 3, stride: int = 1,
+             pad: int | None = None, bias: bool = False, name: str | None = None,
+             groups: int = 1) -> str:
+        B, C, H, W = self.shape(x)
+        pad = kernel // 2 if pad is None else pad
+        OY = (H + 2 * pad - kernel) // stride + 1
+        OX = (W + 2 * pad - kernel) // stride + 1
+        nm = name or self._uid("conv")
+        w = self.param(f"{nm}.w", (k, C // groups, kernel, kernel))
+        out = self._t(f"{nm}.out", (B, k, OY, OX))
+        dims = dict(B=B, K=k, C=C // groups, OY=OY, OX=OX, FY=kernel, FX=kernel)
+        ins = [x, w]
+        if bias:
+            ins.append(self.param(f"{nm}.b", (k,)))
+        self._node("conv" if groups == 1 else "conv_dw", ins, [out], dims,
+                   conv_flops(dims) * (groups if groups == 1 else 1), name=nm,
+                   meta=dict(stride=stride, pad=pad, groups=groups))
+        return out
+
+    def linear(self, x: str, n: int, bias: bool = True,
+               name: str | None = None) -> str:
+        shp = self.shape(x)
+        k = shp[-1]
+        b = int(math.prod(shp[:-1])) or 1
+        nm = name or self._uid("fc")
+        w = self.param(f"{nm}.w", (k, n))
+        out = self._t(f"{nm}.out", (*shp[:-1], n))
+        ins = [x, w]
+        if bias:
+            ins.append(self.param(f"{nm}.b", (n,)))
+        dims = dict(B=1, M=b, N=n, K=k)
+        self._node("gemm", ins, [out], dims, gemm_flops(dims), name=nm)
+        return out
+
+    def matmul(self, a: str, b: str, name: str | None = None,
+               op: str = "gemm") -> str:
+        """Activation × activation batched matmul (attention scores etc.).
+        a: (..., M, K)   b: (..., K, N)."""
+        sa, sb = self.shape(a), self.shape(b)
+        assert sa[-1] == sb[-2], (sa, sb)
+        batch = int(math.prod(sa[:-2])) or 1
+        nm = name or self._uid("mm")
+        out = self._t(f"{nm}.out", (*sa[:-2], sa[-2], sb[-1]))
+        dims = dict(B=batch, M=sa[-2], N=sb[-1], K=sa[-1])
+        self._node(op, [a, b], [out], dims, gemm_flops(dims), name=nm)
+        return out
+
+    # -- element-wise / misc --------------------------------------------------
+
+    def _ew(self, op: str, inputs: list[str], out_shape=None, fl_per_elem=1,
+            name: str | None = None, meta=None) -> str:
+        shp = out_shape or self.shape(inputs[0])
+        n = int(math.prod(shp)) or 1
+        nm = name or self._uid(op)
+        out = self._t(f"{nm}.out", shp)
+        self._node(op, inputs, [out], dict(N=n), n * fl_per_elem, name=nm,
+                   meta=meta)
+        return out
+
+    def relu(self, x, name=None):
+        return self._ew("relu", [x], name=name, meta={"stored": "sign"})
+
+    def gelu(self, x, name=None):
+        return self._ew("gelu", [x], fl_per_elem=8, name=name)
+
+    def silu(self, x, name=None):
+        return self._ew("silu", [x], fl_per_elem=6, name=name)
+
+    def square_relu(self, x, name=None):
+        return self._ew("relu", [x], fl_per_elem=2, name=name or self._uid("sqrelu"))
+
+    def add(self, a, b, name=None):
+        return self._ew("add", [a, b], name=name)
+
+    def mul(self, a, b, name=None):
+        return self._ew("mul", [a, b], name=name)
+
+    def scale(self, x, name=None):
+        return self._ew("mul", [x], name=name)
+
+    def norm(self, x, affine: bool = True, kind: str = "batchnorm",
+             name: str | None = None) -> str:
+        shp = self.shape(x)
+        nm = name or self._uid(kind)
+        ins = [x]
+        if affine:
+            c = shp[1] if kind == "batchnorm" else shp[-1]
+            ins.append(self.param(f"{nm}.scale", (c,)))
+            if kind != "rmsnorm":
+                ins.append(self.param(f"{nm}.bias", (c,)))
+        n = int(math.prod(shp))
+        out = self._t(f"{nm}.out", shp)
+        self._node("norm", ins, [out], dict(N=n), 4 * n, name=nm,
+                   meta={"kind": kind})
+        return out
+
+    def softmax(self, x, name=None):
+        return self._ew("softmax", [x], fl_per_elem=5, name=name)
+
+    def pool(self, x, kernel=2, stride=None, kind="max", name=None):
+        B, C, H, W = self.shape(x)
+        stride = stride or kernel
+        OY, OX = H // stride, W // stride
+        nm = name or self._uid(f"{kind}pool")
+        out = self._t(f"{nm}.out", (B, C, OY, OX))
+        n = B * C * OY * OX
+        self._node("pool", [x], [out], dict(N=n), n * kernel * kernel, name=nm,
+                   meta={"kind": kind, "stored": "indices" if kind == "max" else None})
+        return out
+
+    def global_avg_pool(self, x, name=None):
+        B, C, H, W = self.shape(x)
+        nm = name or self._uid("gap")
+        out = self._t(f"{nm}.out", (B, C))
+        self._node("reduce", [x], [out], dict(N=B * C * H * W), B * C * H * W,
+                   name=nm)
+        return out
+
+    def transpose(self, x, perm, name=None):
+        shp = self.shape(x)
+        out_shape = tuple(shp[p] for p in perm)
+        nm = name or self._uid("tr")
+        out = self._t(f"{nm}.out", out_shape)
+        n = int(math.prod(shp))
+        self._node("transpose", [x], [out], dict(N=n), 0, name=nm,
+                   meta={"perm": tuple(perm)})
+        return out
+
+    def reshape(self, x, shape, name=None):
+        nm = name or self._uid("rs")
+        out = self._t(f"{nm}.out", shape)
+        self._node("reshape", [x], [out], dict(N=int(math.prod(shape))), 0,
+                   name=nm)
+        return out
+
+    def embed(self, tokens: str, vocab: int, d: int, name=None) -> str:
+        shp = self.shape(tokens)
+        nm = name or self._uid("embed")
+        tbl = self.param(f"{nm}.table", (vocab, d))
+        out = self._t(f"{nm}.out", (*shp, d))
+        n = int(math.prod(shp)) * d
+        self._node("embed", [tokens, tbl], [out], dict(N=n), 0, name=nm)
+        return out
+
+    def loss_xent(self, logits: str, labels: str, name="loss") -> str:
+        shp = self.shape(logits)
+        n = int(math.prod(shp))
+        out = self._t(f"{name}.out", (1,), "float32")
+        self.g.add_node(Node(name, "loss", "loss", dict(N=n), [logits, labels],
+                             [out], 6 * n))
+        return out

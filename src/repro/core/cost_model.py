@@ -1,0 +1,234 @@
+"""Per-node / per-fused-subgraph analytic cost model (Stream-lite).
+
+Latency: dataflow-aware compute cycles (spatial under-utilization from
+ceil-division over the PE array) vs. memory cycles (off-chip + local SRAM
+bandwidth), overlapped (double-buffered): ``max(compute, mem)``.
+
+Energy: MAC energy + per-level traffic × energy/byte + leakage × cycles
+(added at schedule level).
+
+Traffic: two-level model.  The dataflow's stationary operand is fetched once;
+if it exceeds local SRAM the streamed operands are re-fetched per chunk
+(classic tiling reload).  Tensors resident in local SRAM from a fused
+predecessor are free (this is exactly the fusion payoff the paper models).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .accelerators import CoreSpec, HDASpec
+from .graph import Node, WorkloadGraph, dtype_bytes
+
+
+@dataclass
+class NodeCost:
+    cycles: float
+    offchip_bytes: float
+    local_bytes: float
+    link_bytes: float
+    energy_pj: float
+    core: str
+
+    def __add__(self, other: "NodeCost") -> "NodeCost":
+        return NodeCost(self.cycles + other.cycles,
+                        self.offchip_bytes + other.offchip_bytes,
+                        self.local_bytes + other.local_bytes,
+                        self.link_bytes + other.link_bytes,
+                        self.energy_pj + other.energy_pj, self.core)
+
+
+# ---------------------------------------------------------------------------
+# compute cycles
+# ---------------------------------------------------------------------------
+
+
+def _loop_mapping(node: Node, core: CoreSpec) -> dict:
+    """Normalize node loop dims onto the core's spatial dim names."""
+    d = node.dims
+    cls = node.op_class
+    if cls == "conv":
+        full = dict(K=d["K"], C=d["C"],
+                    M=d["B"] * d["OY"] * d["OX"], N=d["K"],
+                    OY=d["B"] * d["OY"] * d["OX"], rest=d["FY"] * d["FX"])
+        if core.dataflow == "ws":
+            # spatial K (lanes) × C (simd); temporal B·OY·OX·FY·FX
+            return {"K": d["K"], "C": d["C"],
+                    "_temporal": d["B"] * d["OY"] * d["OX"] * d["FY"] * d["FX"]}
+        # output-stationary: spatial M×N = (B·OY·OX)×K; temporal C·FY·FX
+        return {"M": d["B"] * d["OY"] * d["OX"], "N": d["K"],
+                "_temporal": d["C"] * d["FY"] * d["FX"]}
+    if cls == "gemm":
+        if core.dataflow == "ws":
+            # weights (K_in×N) stationary: spatial K←N(out), C←K(in)
+            return {"K": d["N"], "C": d["K"],
+                    "_temporal": d.get("B", 1) * d["M"]}
+        return {"M": d["M"], "N": d["N"],
+                "_temporal": d.get("B", 1) * d["K"]}
+    return {}
+
+
+def compute_cycles(node: Node, core: CoreSpec, tp: int = 1) -> float:
+    """Cycles to execute ``node`` on ``core`` with ``tp``-way tensor
+    parallelism over identical core replicas (output channels split —
+    paper §IV-A)."""
+    cls = node.op_class
+    if cls in ("conv", "gemm"):
+        m = _loop_mapping(node, core)
+        spatial = dict(core.spatial)
+        cycles = float(m.get("_temporal", 1))
+        first_spatial = True
+        for dim, size in spatial.items():
+            loop = m.get(dim, 1)
+            if first_spatial and tp > 1:
+                loop = math.ceil(loop / tp)   # split across PE replicas
+            first_spatial = False
+            cycles *= math.ceil(loop / size)
+        return max(cycles, 1.0)
+    if cls in ("simd", "move"):
+        width = core.peak_macs
+        work = node.flops
+        if work == 0:  # pure data movement: bound by local bandwidth
+            nbytes = 2 * node.dims.get("N", 1)   # bf16 elements
+            return max(nbytes / max(core.local.bw, 1e-9), 1.0)
+        return max(math.ceil(work / width), 1.0)
+    return 1.0
+
+
+# ---------------------------------------------------------------------------
+# cost model bound to a graph + HDA
+# ---------------------------------------------------------------------------
+
+
+class CostModel:
+    def __init__(self, graph: WorkloadGraph, hda: HDASpec,
+                 tensor_parallel: bool = True):
+        self.g = graph
+        self.hda = hda
+        self.tensor_parallel = tensor_parallel
+        self._compute = (hda.compute_cores() or list(hda.cores))[0]
+        simd = hda.simd_cores()
+        self._simd = simd[0] if simd else self._compute
+
+    # -- core assignment -----------------------------------------------------
+
+    def core_for(self, node: Node) -> CoreSpec:
+        if node.op_class in ("conv", "gemm"):
+            return self._compute
+        return self._simd
+
+    def tp_for(self, node: Node, core: CoreSpec) -> int:
+        if not self.tensor_parallel or node.op_class not in ("conv", "gemm"):
+            return 1
+        return core.count
+
+    # -- byte helpers ---------------------------------------------------------
+
+    def nbytes(self, tensor: str) -> int:
+        return self.g.tensors[tensor].bytes
+
+    def in_bytes(self, node: Node, resident: set) -> int:
+        seen = set()
+        tot = 0
+        for t in node.inputs:
+            if t in resident or t in seen:
+                continue
+            seen.add(t)
+            tot += self.nbytes(t)
+        return tot
+
+    def out_bytes(self, node: Node, internal: set) -> int:
+        return sum(self.nbytes(t) for t in node.outputs if t not in internal)
+
+    # -- node cost ------------------------------------------------------------
+
+    def node_cost(self, node: Node, resident: set = frozenset(),
+                  internal_out: set = frozenset()) -> NodeCost:
+        core = self.core_for(node)
+        tp = self.tp_for(node, core)
+        cyc = compute_cycles(node, core, tp)
+
+        inb = self.in_bytes(node, resident)
+        outb = self.out_bytes(node, internal_out)
+
+        # stationary-operand chunking: if the stationary operand spills the
+        # local SRAM, streamed operands are reloaded per chunk.
+        offchip = inb + outb
+        if node.op_class in ("conv", "gemm") and len(node.inputs) >= 2:
+            if core.dataflow == "ws":
+                stationary = self.nbytes(node.inputs[1])       # weights
+                streamed = inb - (stationary if node.inputs[1] not in resident
+                                  else 0)
+            else:  # output-stationary
+                stationary = sum(self.nbytes(t) for t in node.outputs)
+                streamed = inb
+            cap = max(core.local.size * core.count, 1)
+            chunks = max(1, math.ceil(stationary / cap))
+            if chunks > 1:
+                offchip += streamed * (chunks - 1)
+
+        # local traffic: every off-chip byte passes through local SRAM, plus
+        # MAC operand traffic filtered by register-file reuse (~√RF).
+        eb = dtype_bytes(self.g.tensors[node.outputs[0]].dtype
+                         if node.outputs else "bfloat16")
+        reuse = max(1.0, math.sqrt(core.rf.size / max(2 * eb, 1)) / 4)
+        local = offchip + 2 * node.macs * eb / reuse
+
+        mem_cycles = max(offchip / max(self.hda.offchip_bw, 1e-9),
+                         local / max(core.local.bw * core.count, 1e-9))
+        cycles = max(cyc, mem_cycles)
+
+        energy = (node.macs * core.e_mac +
+                  local * core.local.e_per_byte +
+                  offchip * self.hda.offchip_e)
+        return NodeCost(cycles, offchip, local, 0.0, energy, core.name)
+
+    # -- fused subgraph cost ----------------------------------------------------
+
+    def subgraph_cost(self, nodes: list) -> NodeCost:
+        """Cost of a fused subgraph: internal tensors never leave local SRAM;
+        per-core work pipelines (latency = max over engines, double-buffered
+        against off-chip traffic)."""
+        node_objs = [self.g.nodes[n] for n in nodes]
+        produced = {t for nd in node_objs for t in nd.outputs}
+        nodeset = set(nodes)
+        internal = {t for t in produced
+                    if all(c in nodeset for c in self.g.consumers.get(t, []))
+                    and self.g.consumers.get(t)}
+
+        per_core_cycles: dict[str, float] = {}
+        offchip = local = link = energy = 0.0
+        resident: set = set()
+        for nd in node_objs:
+            c = self.node_cost(nd, resident=resident | internal,
+                               internal_out=internal)
+            core = self.core_for(nd)
+            per_core_cycles[core.name] = (per_core_cycles.get(core.name, 0.0)
+                                          + compute_cycles(nd, core,
+                                                           self.tp_for(nd, core)))
+            offchip += c.offchip_bytes
+            local += c.local_bytes
+            energy += c.energy_pj
+            resident |= set(nd.outputs)
+
+        # intermediate tensors crossing engines ride the on-chip link
+        for t in internal:
+            prod_core = self.core_for(self.g.nodes[self.g.producer[t]]).name
+            for cons in self.g.consumers.get(t, []):
+                if self.core_for(self.g.nodes[cons]).name != prod_core:
+                    link += self.nbytes(t)
+        energy += link * self.hda.link_e
+        # internal tensors still cost local SRAM round-trips
+        internal_bytes = sum(self.nbytes(t) for t in internal)
+        local_level = self._compute.local
+        energy += 2 * internal_bytes * local_level.e_per_byte
+        local += 2 * internal_bytes
+
+        mem_cycles = max(offchip / max(self.hda.offchip_bw, 1e-9),
+                         local / max(local_level.bw * self._compute.count, 1e-9),
+                         link / max(self.hda.link_bw, 1e-9))
+        cycles = max(max(per_core_cycles.values(), default=1.0), mem_cycles)
+        core = max(per_core_cycles, key=per_core_cycles.get) \
+            if per_core_cycles else self._simd.name
+        return NodeCost(cycles, offchip, local, link, energy, core)

@@ -1,0 +1,90 @@
+"""Hardware design-space exploration (paper §IV, Figs. 1/8/9).
+
+Sweeps a Table-II/III-style grid, evaluates each HDA on the given workload
+graphs through the scheduler, and extracts Pareto fronts.
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass
+
+from .accelerators import HDASpec, edge_tpu, fusemax, grid
+from .fusion import manual_fusion
+from .graph import WorkloadGraph
+from .scheduling import ScheduleResult, schedule
+
+
+@dataclass
+class DSEPoint:
+    config: dict
+    hda: str
+    results: dict          # workload name -> ScheduleResult
+
+    def row(self) -> dict:
+        out = dict(self.config)
+        for wname, r in self.results.items():
+            out[f"{wname}_latency"] = r.latency
+            out[f"{wname}_energy"] = r.energy
+            out[f"{wname}_peak_mem"] = r.peak_mem
+        return out
+
+
+def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
+          seed: int = 0, fusion: str = "manual") -> list[DSEPoint]:
+    """Evaluate every (or ``sample`` random) config in ``space`` on each
+    workload graph.  ``workloads``: name → WorkloadGraph."""
+    configs = grid(space)
+    if sample is not None and sample < len(configs):
+        rng = random.Random(seed)
+        configs = rng.sample(configs, sample)
+    parts = {}
+    points: list[DSEPoint] = []
+    for cfg in configs:
+        hda = make_hda(**cfg)
+        results = {}
+        for wname, g in workloads.items():
+            part = None
+            if fusion == "manual":
+                if wname not in parts:
+                    parts[wname] = manual_fusion(g)
+                part = parts[wname]
+            results[wname] = schedule(g, hda, part)
+        points.append(DSEPoint(cfg, hda.name, results))
+    return points
+
+
+def pareto_front(points: list, metrics) -> list:
+    """Non-dominated subset w.r.t. ``metrics``: callables point→float
+    (minimize)."""
+    vals = [[m(p) for m in metrics] for p in points]
+    front = []
+    for i, vi in enumerate(vals):
+        dominated = False
+        for j, vj in enumerate(vals):
+            if i != j and all(a <= b for a, b in zip(vj, vi)) and \
+                    any(a < b for a, b in zip(vj, vi)):
+                dominated = True
+                break
+        if not dominated:
+            front.append(points[i])
+    return front
+
+
+def compute_resource(cfg: dict) -> int:
+    """Paper x-axis: U · L · n_PEs (Edge TPU) or array size (FuseMax)."""
+    if "simd_units" in cfg:
+        return (cfg["simd_units"] * 4 * cfg["lanes"] *
+                cfg["x_pes"] * cfg["y_pes"])
+    return cfg.get("x_pes", 1) * cfg.get("y_pes", 1)
+
+
+def spread(values) -> dict:
+    import numpy as np
+    a = np.asarray(list(values), dtype=float)
+    return dict(min=float(a.min()), p25=float(np.percentile(a, 25)),
+                median=float(np.median(a)), p75=float(np.percentile(a, 75)),
+                max=float(a.max()),
+                rel_iqr=float((np.percentile(a, 75) - np.percentile(a, 25))
+                              / max(np.median(a), 1e-30)))

@@ -1,0 +1,340 @@
+"""Constraint-based layer-fusion solver (paper §V-A).
+
+1.  **Candidate enumeration** — bounded BFS from every node.  A node ``v``
+    may join a growing subgraph S only when every predecessor of ``v`` that is
+    a descendant of the seed is already in S (this guarantees *convexity*, so
+    the quotient graph stays acyclic).  Backtracking constraints prune the
+    search (paper):
+
+    * memory:      Σᵢ mᵢ,c / T  ≤  M_c        (tile working set fits local SRAM)
+    * tiling:      ∀ i,j:  Tᵢ | Tⱼ  or  Tⱼ | Tᵢ  (intra-core tiling compatible)
+    * op types:    ≤ 3 conv  and  ≤ 2 GEMM per subgraph
+    * BFS length:  |S| ≤ max_len
+
+2.  **Post filter** — at most one node with outgoing external edges
+    (Σ_{v∈g} o_v ≤ 1), so fused subgraphs never spill intermediates off-chip.
+
+3.  **Integer program** — exact cover of V minimizing Σ x_g (number of
+    subgraphs), solved by branch-and-bound with a greedy incumbent and a
+    time budget (the paper itself uses a heuristic objective).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+
+from .accelerators import HDASpec
+from .graph import WorkloadGraph
+
+
+@dataclass
+class FusionConfig:
+    max_len: int = 6
+    max_conv: int = 3
+    max_gemm: int = 2
+    enforce_single_output: bool = True
+    enforce_memory: bool = True
+    enforce_tiling: bool = True
+    max_candidates: int = 40000
+    max_per_seed: int = 400
+    time_limit_s: float = 10.0
+
+
+# ---------------------------------------------------------------------------
+# graph pre-analysis
+# ---------------------------------------------------------------------------
+
+
+class _Idx:
+    """Integer-indexed view of the graph with descendant bitsets."""
+
+    def __init__(self, g: WorkloadGraph):
+        self.g = g
+        self.order = g.topo_order()
+        self.idx = {n: i for i, n in enumerate(self.order)}
+        n = len(self.order)
+        self.preds = [[self.idx[p] for p in g.predecessors(nm)]
+                      for nm in self.order]
+        self.succs = [[self.idx[s] for s in g.successors(nm)]
+                      for nm in self.order]
+        # descendants bitmask, computed in reverse topo order
+        self.desc = [0] * n
+        for i in range(n - 1, -1, -1):
+            m = 0
+            for s in self.succs[i]:
+                m |= (1 << s) | self.desc[s]
+            self.desc[i] = m
+
+    def node(self, i: int):
+        return self.g.nodes[self.order[i]]
+
+
+def _tiling_factor(node) -> int:
+    """Outer temporal loop extent used as the intra-core tiling factor."""
+    d = node.dims
+    if node.op_class == "conv":
+        return max(d.get("OY", 1), 1)
+    if node.op_class == "gemm":
+        return max(d.get("M", 1), 1)
+    return 1  # element-wise ops tile freely
+
+
+def _node_bytes(g: WorkloadGraph, name: str) -> int:
+    nd = g.nodes[name]
+    seen, tot = set(), 0
+    for t in list(nd.inputs) + list(nd.outputs):
+        if t not in seen:
+            seen.add(t)
+            tot += g.tensors[t].bytes
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
+                         cfg: FusionConfig | None = None) -> list[tuple]:
+    cfg = cfg or FusionConfig()
+    ix = _Idx(g)
+    n = len(ix.order)
+    comp = (hda.compute_cores() or list(hda.cores))[0]
+    cap = comp.local.size * comp.count
+
+    tiling = [_tiling_factor(ix.node(i)) for i in range(n)]
+    nbytes = [_node_bytes(g, ix.order[i]) for i in range(n)]
+
+    def compat(ts: list[int], t: int) -> bool:
+        return all(a % t == 0 or t % a == 0 for a in ts if a > 1) or t == 1
+
+    candidates: set[frozenset] = set()
+    deadline = time.monotonic() + cfg.time_limit_s
+
+    for seed in range(n):
+        if time.monotonic() > deadline or len(candidates) >= cfg.max_candidates:
+            break
+        seed_desc = ix.desc[seed]
+        per_seed = 0
+        # DFS over grow decisions
+        init_counts = _op_counts(ix.node(seed))
+        stack = [(frozenset([seed]), init_counts,
+                  [tiling[seed]] if tiling[seed] > 1 else [])]
+        seen_states: set[frozenset] = set()
+        while stack and per_seed < cfg.max_per_seed:
+            S, counts, ts = stack.pop()
+            if len(S) >= 2 and S not in candidates:
+                candidates.add(S)
+                per_seed += 1
+            if len(S) >= cfg.max_len:
+                continue
+            # eligible frontier: successors of S, convexity-safe
+            frontier = set()
+            for u in S:
+                for v in ix.succs[u]:
+                    if v in S or v in frontier:
+                        continue
+                    if all((p in S) or not ((seed_desc >> p) & 1 or p == seed)
+                           for p in ix.preds[v]):
+                        frontier.add(v)
+            for v in sorted(frontier):
+                nd = ix.node(v)
+                c2 = _add_counts(counts, nd)
+                if c2[0] > cfg.max_conv or c2[1] > cfg.max_gemm:
+                    continue
+                t = tiling[v]
+                if cfg.enforce_tiling and not compat(ts, t):
+                    continue
+                S2 = S | {v}
+                if S2 in seen_states:
+                    continue
+                if cfg.enforce_memory:
+                    tmin = min([x for x in ts + [t] if x > 1], default=1)
+                    ws = sum(nbytes[i] / max(
+                        1, tmin if tiling[i] > 1 else 1) for i in S2)
+                    if ws > cap:
+                        continue
+                seen_states.add(S2)
+                stack.append((S2, c2, ts + ([t] if t > 1 else [])))
+
+    # post filter: ≤ 1 node with outgoing external edges
+    out: list[tuple] = []
+    for S in candidates:
+        if cfg.enforce_single_output and _external_outputs(ix, S) > 1:
+            continue
+        out.append(tuple(sorted(S)))
+    # singletons are always valid
+    out.extend((i,) for i in range(n))
+    out.sort(key=lambda s: (-len(s), s))
+    return [tuple(ix.order[i] for i in S) for S in out]
+
+
+def _op_counts(nd) -> tuple:
+    return (1 if nd.op_class == "conv" else 0,
+            1 if nd.op_class == "gemm" else 0)
+
+
+def _add_counts(c, nd) -> tuple:
+    a, b = _op_counts(nd)
+    return (c[0] + a, c[1] + b)
+
+
+def _external_outputs(ix: _Idx, S: frozenset) -> int:
+    cnt = 0
+    for u in S:
+        if any(v not in S for v in ix.succs[u]):
+            cnt += 1
+    return cnt
+
+
+# ---------------------------------------------------------------------------
+# exact-cover IP:  min Σ x_g   s.t.   Σ_{g∋i} x_g = 1  ∀i
+# ---------------------------------------------------------------------------
+
+
+def solve_cover(n_nodes: int, cands: list[tuple], idx_of: dict,
+                time_limit_s: float = 10.0) -> list[tuple]:
+    """Branch-and-bound minimum-cardinality exact cover with a greedy
+    incumbent.  ``cands`` are tuples of node names; returns a partition."""
+    sets = [frozenset(idx_of[x] for x in c) for c in cands]
+    by_node: dict[int, list[int]] = {i: [] for i in range(n_nodes)}
+    for si, s in enumerate(sets):
+        for i in s:
+            by_node[i].append(si)
+    # candidates covering each node, largest first
+    for i in by_node:
+        by_node[i].sort(key=lambda si: -len(sets[si]))
+
+    # greedy incumbent
+    def greedy() -> list[int]:
+        covered: set[int] = set()
+        sol = []
+        for i in range(n_nodes):
+            if i in covered:
+                continue
+            for si in by_node[i]:
+                if sets[si].isdisjoint(covered):
+                    sol.append(si)
+                    covered |= sets[si]
+                    break
+        return sol
+
+    best = greedy()
+    best_len = len(best)
+    max_size = max((len(s) for s in sets), default=1)
+    deadline = time.monotonic() + time_limit_s
+
+    sol_stack: list[int] = []
+
+    def bnb(first_uncovered: int, covered: frozenset, depth: int):
+        nonlocal best, best_len
+        if time.monotonic() > deadline:
+            return
+        while first_uncovered < n_nodes and first_uncovered in covered:
+            first_uncovered += 1
+        if first_uncovered >= n_nodes:
+            if depth < best_len:
+                best, best_len = list(sol_stack), depth
+            return
+        remaining = n_nodes - len(covered)
+        if depth + math.ceil(remaining / max_size) >= best_len:
+            return
+        for si in by_node[first_uncovered]:
+            if not sets[si].isdisjoint(covered):
+                continue
+            sol_stack.append(si)
+            bnb(first_uncovered + 1, covered | sets[si], depth + 1)
+            sol_stack.pop()
+
+    if n_nodes <= 2000:
+        bnb(0, frozenset(), 0)
+    return [cands[si] for si in best]
+
+
+def repair_partition(g: WorkloadGraph, partition: list) -> list:
+    """Individually-convex subgraphs can still form *mutual* cycles in the
+    quotient (A→B and B→A through disjoint diamonds).  Break any strongly
+    connected quotient component by splitting its largest part into
+    singletons until the quotient is a DAG."""
+    import networkx as nx
+
+    partition = [tuple(sg) for sg in partition]
+    while True:
+        sg_of = {n: i for i, sg in enumerate(partition) for n in sg}
+        qg = nx.DiGraph()
+        qg.add_nodes_from(range(len(partition)))
+        for n in g.nodes:
+            for s in g.successors(n):
+                a, b = sg_of[n], sg_of[s]
+                if a != b:
+                    qg.add_edge(a, b)
+        sccs = [c for c in nx.strongly_connected_components(qg) if len(c) > 1]
+        if not sccs:
+            return partition
+        worst = max(sccs, key=len)
+        victim = max(worst, key=lambda i: len(partition[i]))
+        new = [sg for i, sg in enumerate(partition) if i != victim]
+        new.extend((n,) for n in partition[victim])
+        partition = new
+
+
+def solve_fusion(g: WorkloadGraph, hda: HDASpec,
+                 cfg: FusionConfig | None = None) -> list[tuple]:
+    """Full pipeline: enumerate candidates, solve the exact-cover IP, and
+    repair any quotient cycles.  Returns a partition (list of node-name
+    tuples) covering every node exactly once."""
+    cfg = cfg or FusionConfig()
+    cands = enumerate_candidates(g, hda, cfg)
+    idx_of = {n: i for i, n in enumerate(g.topo_order())}
+    part = solve_cover(len(idx_of), cands, idx_of,
+                       time_limit_s=cfg.time_limit_s)
+    return repair_partition(g, part)
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+
+def layer_by_layer(g: WorkloadGraph) -> list[tuple]:
+    return [(n,) for n in g.topo_order()]
+
+
+def manual_fusion(g: WorkloadGraph) -> list[tuple]:
+    """The classic hand-designed pattern: a conv/GEMM absorbs its following
+    chain of element-wise ops (norm → act → add), mimicking the paper's
+    manually designed Stream configuration."""
+    order = g.topo_order()
+    taken: set[str] = set()
+    part: list[tuple] = []
+    for n in order:
+        if n in taken:
+            continue
+        nd = g.nodes[n]
+        grp = [n]
+        taken.add(n)
+        if nd.op_class in ("conv", "gemm"):
+            cur = n
+            while True:
+                succs = [s for s in g.successors(cur) if s not in taken]
+                if len(succs) != 1:
+                    break
+                s = succs[0]
+                snd = g.nodes[s]
+                if snd.op_class not in ("simd",) or \
+                        any(p not in taken and p != cur and
+                            g.nodes[p].kind not in () for p in
+                            g.predecessors(s) if p not in taken):
+                    break
+                # only absorb if all preds already placed (convexity-safe)
+                if not all(p in taken or p == cur for p in g.predecessors(s)):
+                    break
+                grp.append(s)
+                taken.add(s)
+                cur = s
+                if len(grp) >= 4:
+                    break
+        part.append(tuple(grp))
+    return part

@@ -1,0 +1,316 @@
+"""Workload-graph IR for MONET.
+
+A neural network (inference or full training iteration) is a directed graph
+G = (V, E): nodes are operators, edges are tensors (paper §II-A).  This IR is
+the common currency between the front-ends (explicit builders, jaxpr tracing),
+the training transformation pass, the fusion solver, the activation-checkpoint
+rewriter and the HDA cost model.
+
+Conventions
+-----------
+* Loop dims follow Stream/ZigZag:  conv: B,K,C,OY,OX,FY,FX  — gemm: B,M,N,K
+  elementwise/reduce/transpose: N (total elements).
+* ``Node.kind`` partitions the training iteration:
+  fwd | loss | bwd_data | bwd_weight | bwd_bias | bwd (generic) | opt | aux.
+* Tensors are globally named; ``WorkloadGraph.tensors`` owns the specs,
+  producer/consumer maps are derived and kept consistent by ``add_node``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Iterator
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Tensors
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "bfloat16": 2, "bf16": 2, "float16": 2, "fp16": 2,
+    "int32": 4, "int8": 1, "uint8": 1, "bool": 1, "int64": 8, "float64": 8,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    try:
+        return _DTYPE_BYTES[dtype]
+    except KeyError:
+        return int(np.dtype(dtype).itemsize)
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """An edge payload: a named tensor with shape/dtype and roles."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "bfloat16"
+    is_param: bool = False          # trainable parameter
+    is_state: bool = False          # optimizer state
+    is_input: bool = False          # graph input (data)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bytes(self) -> int:
+        return self.size * dtype_bytes(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Nodes
+# ---------------------------------------------------------------------------
+
+#: op → category used by the cost model / fusion constraints
+OP_CLASS = {
+    "conv": "conv",
+    "conv_dw": "conv",            # depthwise
+    "conv_bwd_data": "conv",      # transposed conv
+    "conv_bwd_weight": "conv",
+    "gemm": "gemm",
+    "gemm_bwd_data": "gemm",
+    "gemm_bwd_weight": "gemm",
+    "attention_qk": "gemm",
+    "attention_av": "gemm",
+    "elementwise": "simd",
+    "add": "simd",
+    "mul": "simd",
+    "relu": "simd",
+    "relu_bwd": "simd",
+    "gelu": "simd",
+    "gelu_bwd": "simd",
+    "silu": "simd",
+    "silu_bwd": "simd",
+    "softmax": "simd",
+    "softmax_bwd": "simd",
+    "norm": "simd",
+    "norm_bwd": "simd",
+    "pool": "simd",
+    "pool_bwd": "simd",
+    "reduce": "simd",
+    "transpose": "move",
+    "reshape": "move",
+    "embed": "move",
+    "embed_bwd": "simd",
+    "loss": "simd",
+    "loss_bwd": "simd",
+    "opt": "simd",
+    "scan": "simd",
+}
+
+
+@dataclass
+class Node:
+    """One operator. ``dims`` is the loop nest; ``flops`` counts MUL+ADD."""
+
+    name: str
+    op: str
+    kind: str = "fwd"
+    dims: dict = field(default_factory=dict)
+    inputs: list = field(default_factory=list)     # tensor names
+    outputs: list = field(default_factory=list)    # tensor names
+    flops: int = 0
+    source: str | None = None   # fwd node this bwd/recompute node derives from
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def op_class(self) -> str:
+        return OP_CLASS.get(self.op, "simd")
+
+    @property
+    def macs(self) -> int:
+        return self.flops // 2
+
+
+def conv_flops(d: dict) -> int:
+    return 2 * d["B"] * d["K"] * d["C"] * d["OY"] * d["OX"] * d["FY"] * d["FX"]
+
+
+def gemm_flops(d: dict) -> int:
+    return 2 * d.get("B", 1) * d["M"] * d["N"] * d["K"]
+
+
+# ---------------------------------------------------------------------------
+# Graph
+# ---------------------------------------------------------------------------
+
+
+class GraphError(RuntimeError):
+    pass
+
+
+class WorkloadGraph:
+    """Mutable DAG of Nodes + TensorSpecs with derived producer/consumer maps."""
+
+    def __init__(self, name: str = "workload"):
+        self.name = name
+        self.nodes: dict[str, Node] = {}
+        self.tensors: dict[str, TensorSpec] = {}
+        self.producer: dict[str, str] = {}          # tensor -> node
+        self.consumers: dict[str, list[str]] = {}   # tensor -> [node]
+
+    # -- construction -------------------------------------------------------
+
+    def add_tensor(self, spec: TensorSpec) -> TensorSpec:
+        existing = self.tensors.get(spec.name)
+        if existing is not None and existing != spec:
+            raise GraphError(f"tensor {spec.name!r} redefined with different spec")
+        self.tensors[spec.name] = spec
+        self.consumers.setdefault(spec.name, [])
+        return spec
+
+    def tensor(self, name: str, shape: tuple[int, ...], dtype: str = "bfloat16",
+               **kw) -> str:
+        self.add_tensor(TensorSpec(name, tuple(int(s) for s in shape), dtype, **kw))
+        return name
+
+    def add_node(self, node: Node) -> Node:
+        if node.name in self.nodes:
+            raise GraphError(f"node {node.name!r} already exists")
+        for t in node.inputs:
+            if t not in self.tensors:
+                raise GraphError(f"{node.name}: unknown input tensor {t!r}")
+        for t in node.outputs:
+            if t not in self.tensors:
+                raise GraphError(f"{node.name}: unknown output tensor {t!r}")
+            if t in self.producer:
+                raise GraphError(f"tensor {t!r} produced twice "
+                                 f"({self.producer[t]} and {node.name})")
+            self.producer[t] = node.name
+        for t in node.inputs:
+            self.consumers.setdefault(t, []).append(node.name)
+        self.nodes[node.name] = node
+        return node
+
+    # -- structure ----------------------------------------------------------
+
+    def predecessors(self, node: str) -> list[str]:
+        seen, out = set(), []
+        for t in self.nodes[node].inputs:
+            p = self.producer.get(t)
+            if p is not None and p not in seen:
+                seen.add(p)
+                out.append(p)
+        return out
+
+    def successors(self, node: str) -> list[str]:
+        seen, out = set(), []
+        for t in self.nodes[node].outputs:
+            for c in self.consumers.get(t, []):
+                if c not in seen:
+                    seen.add(c)
+                    out.append(c)
+        return out
+
+    def topo_order(self) -> list[str]:
+        indeg = {n: 0 for n in self.nodes}
+        for n in self.nodes:
+            for p in self.predecessors(n):
+                indeg[n] += 1
+        ready = sorted(n for n, d in indeg.items() if d == 0)
+        out: list[str] = []
+        from collections import deque
+        q = deque(ready)
+        while q:
+            n = q.popleft()
+            out.append(n)
+            for s in self.successors(n):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    q.append(s)
+        if len(out) != len(self.nodes):
+            cyc = set(self.nodes) - set(out)
+            raise GraphError(f"graph has a cycle involving {sorted(cyc)[:5]}")
+        return out
+
+    def validate(self) -> None:
+        self.topo_order()
+        for t, cs in self.consumers.items():
+            spec = self.tensors[t]
+            if t not in self.producer and not (
+                spec.is_param or spec.is_state or spec.is_input
+            ) and cs:
+                raise GraphError(f"tensor {t!r} consumed but never produced and "
+                                 "not a param/state/input")
+
+    # -- queries ------------------------------------------------------------
+
+    def nodes_of_kind(self, *kinds: str) -> list[str]:
+        return [n for n, nd in self.nodes.items() if nd.kind in kinds]
+
+    def total_flops(self, kinds: Iterable[str] | None = None) -> int:
+        ks = set(kinds) if kinds else None
+        return sum(nd.flops for nd in self.nodes.values()
+                   if ks is None or nd.kind in ks)
+
+    def param_tensors(self) -> list[TensorSpec]:
+        return [t for t in self.tensors.values() if t.is_param]
+
+    def param_bytes(self) -> int:
+        return sum(t.bytes for t in self.param_tensors())
+
+    def activation_edges(self) -> list[str]:
+        """Tensors produced by fwd nodes and consumed by bwd nodes — the set
+        𝒜 of checkpointable activations (paper §II-A, Eq. 6)."""
+        bwd_kinds = {"bwd", "bwd_data", "bwd_weight", "bwd_bias", "loss_bwd"}
+        out = []
+        for t, prod in self.producer.items():
+            if self.nodes[prod].kind not in ("fwd", "loss"):
+                continue
+            if any(self.nodes[c].kind in bwd_kinds for c in self.consumers.get(t, [])):
+                out.append(t)
+        return sorted(out)
+
+    def activation_bytes(self) -> int:
+        return sum(self.tensors[t].bytes for t in self.activation_edges())
+
+    # -- editing ------------------------------------------------------------
+
+    def copy(self) -> "WorkloadGraph":
+        g = WorkloadGraph(self.name)
+        g.tensors = dict(self.tensors)
+        for n in self.topo_order():
+            nd = self.nodes[n]
+            g.nodes[n] = Node(nd.name, nd.op, nd.kind, dict(nd.dims),
+                              list(nd.inputs), list(nd.outputs), nd.flops,
+                              nd.source, dict(nd.meta))
+        g.producer = dict(self.producer)
+        g.consumers = {t: list(cs) for t, cs in self.consumers.items()}
+        return g
+
+    def rename_tensor_for(self, node: str, old: str, new: str) -> None:
+        """Rewire one consumer edge: ``node`` reads ``new`` instead of ``old``."""
+        nd = self.nodes[node]
+        if old not in nd.inputs:
+            raise GraphError(f"{node} does not read {old}")
+        nd.inputs = [new if t == old else t for t in nd.inputs]
+        self.consumers[old].remove(node)
+        self.consumers.setdefault(new, []).append(node)
+
+    # -- misc ---------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __repr__(self) -> str:
+        return (f"WorkloadGraph({self.name!r}, nodes={len(self.nodes)}, "
+                f"tensors={len(self.tensors)}, "
+                f"GFLOPs={self.total_flops() / 1e9:.2f})")
+
+    def summary(self) -> dict:
+        kinds: dict[str, int] = {}
+        for nd in self.nodes.values():
+            kinds[nd.kind] = kinds.get(nd.kind, 0) + 1
+        return {
+            "nodes": len(self.nodes),
+            "tensors": len(self.tensors),
+            "flops": self.total_flops(),
+            "param_bytes": self.param_bytes(),
+            "activation_edges": len(self.activation_edges()),
+            "activation_bytes": self.activation_bytes(),
+            "kinds": kinds,
+        }

@@ -1,0 +1,138 @@
+"""Clean-room NSGA-II (Deb et al., 2002) for multi-objective bitmask search.
+
+Used by the activation-checkpointing optimizer (paper §V-B): elitist
+(μ+λ) survival with fast non-dominated sorting and crowding-distance
+diversity.  Validated on ZDT1 in the tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def fast_non_dominated_sort(F: np.ndarray) -> list[np.ndarray]:
+    """F: (n, m) objective matrix (minimize).  Returns fronts as index arrays."""
+    n = F.shape[0]
+    dominated_by: list[list[int]] = [[] for _ in range(n)]
+    dom_count = np.zeros(n, dtype=int)
+    for i in range(n):
+        # i dominates j  <=>  all(F_i <= F_j) and any(F_i < F_j)
+        le = np.all(F[i] <= F, axis=1)
+        lt = np.any(F[i] < F, axis=1)
+        dominates = le & lt
+        dominates[i] = False
+        for j in np.nonzero(dominates)[0]:
+            dominated_by[i].append(int(j))
+        dom_count[i] = int(np.sum(np.all(F <= F[i], axis=1) &
+                                  np.any(F < F[i], axis=1)))
+    fronts: list[np.ndarray] = []
+    current = np.nonzero(dom_count == 0)[0]
+    while current.size:
+        fronts.append(current)
+        nxt = []
+        for i in current:
+            for j in dominated_by[i]:
+                dom_count[j] -= 1
+                if dom_count[j] == 0:
+                    nxt.append(j)
+        current = np.array(sorted(set(nxt)), dtype=int)
+    return fronts
+
+
+def crowding_distance(F: np.ndarray) -> np.ndarray:
+    n, m = F.shape
+    d = np.zeros(n)
+    if n <= 2:
+        return np.full(n, np.inf)
+    for k in range(m):
+        order = np.argsort(F[:, k], kind="stable")
+        fmin, fmax = F[order[0], k], F[order[-1], k]
+        d[order[0]] = d[order[-1]] = np.inf
+        span = max(fmax - fmin, 1e-30)
+        d[order[1:-1]] += (F[order[2:], k] - F[order[:-2], k]) / span
+    return d
+
+
+@dataclass
+class NSGA2Result:
+    X: np.ndarray          # (pop, n_var) final population genomes
+    F: np.ndarray          # (pop, n_obj) objectives
+    pareto_X: np.ndarray
+    pareto_F: np.ndarray
+    history: list          # best-front hypervolume proxy per generation
+
+
+def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
+          seed: int = 0, p_crossover: float = 0.9,
+          p_mutation: float | None = None, init: np.ndarray | None = None,
+          ) -> NSGA2Result:
+    """``evaluate(mask: np.ndarray[bool]) -> tuple`` of objectives (minimize)."""
+    rng = np.random.default_rng(seed)
+    p_mut = p_mutation if p_mutation is not None else 1.0 / max(n_var, 1)
+
+    X = rng.random((pop_size, n_var)) < 0.5
+    if init is not None:
+        k = min(len(init), pop_size)
+        X[:k] = init[:k]
+    X[0] = True   # always seed the all-keep (baseline) individual
+    F = np.array([evaluate(x) for x in X], dtype=float)
+
+    def rank_and_crowd(Fm):
+        fronts = fast_non_dominated_sort(Fm)
+        rank = np.empty(Fm.shape[0], dtype=int)
+        crowd = np.empty(Fm.shape[0])
+        for r, fr in enumerate(fronts):
+            rank[fr] = r
+            crowd[fr] = crowding_distance(Fm[fr])
+        return rank, crowd, fronts
+
+    rank, crowd, _ = rank_and_crowd(F)
+    history = []
+
+    for _ in range(generations):
+        # binary tournament selection
+        def pick():
+            i, j = rng.integers(0, pop_size, 2)
+            if (rank[i], -crowd[i]) <= (rank[j], -crowd[j]):
+                return i
+            return j
+
+        children = []
+        while len(children) < pop_size:
+            a, b = X[pick()].copy(), X[pick()].copy()
+            if rng.random() < p_crossover and n_var > 1:
+                cut = rng.integers(1, n_var)
+                a[cut:], b[cut:] = b[cut:].copy(), a[cut:].copy()
+            for c in (a, b):
+                flip = rng.random(n_var) < p_mut
+                c[flip] = ~c[flip]
+                children.append(c)
+        C = np.array(children[:pop_size])
+        CF = np.array([evaluate(c) for c in C], dtype=float)
+
+        # elitist (μ+λ) survival
+        XA = np.concatenate([X, C])
+        FA = np.concatenate([F, CF])
+        r2, c2, fronts = rank_and_crowd(FA)
+        chosen: list[int] = []
+        for fr in fronts:
+            if len(chosen) + len(fr) <= pop_size:
+                chosen.extend(fr.tolist())
+            else:
+                rem = pop_size - len(chosen)
+                order = fr[np.argsort(-c2[fr])]
+                chosen.extend(order[:rem].tolist())
+                break
+        idx = np.array(chosen)
+        X, F = XA[idx], FA[idx]
+        rank, crowd, _ = rank_and_crowd(F)
+        history.append(float(F[rank == 0].mean()))
+
+    fronts = fast_non_dominated_sort(F)
+    pf = fronts[0]
+    # dedupe identical objective rows on the front
+    _, uniq = np.unique(F[pf].round(9), axis=0, return_index=True)
+    pf = pf[np.sort(uniq)]
+    return NSGA2Result(X, F, X[pf], F[pf], history)

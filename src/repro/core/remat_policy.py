@@ -1,0 +1,79 @@
+"""Bridge: MONET activation-checkpointing solutions → real `jax.checkpoint`
+policies.
+
+The real models (:mod:`repro.models`) tag interesting activations with
+``jax.ad_checkpoint.checkpoint_name``; a MONET AC solution (a keep-set over
+activation *families*) becomes ``save_only_these_names`` so the simulator's
+decision drives the actual compiled training step.  This is the beyond-paper
+integration: the DSE layer and the production stack share one knob.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.ad_checkpoint as adc
+
+#: activation families tagged inside repro.models (checkpoint_name sites)
+KNOWN_SITES = (
+    "attn_in", "qkv", "attn_probs", "attn_out", "mlp_in", "mlp_hidden",
+    "mlp_out", "block_out", "ssm_in", "ssm_state", "moe_hidden", "logits",
+)
+
+POLICIES = {
+    "none": None,                                    # remat everything? no: no remat
+    "full": "full_remat",                            # save nothing (recompute all)
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def policy_from_keep(keep_names) -> object:
+    """Build a `jax.checkpoint` policy that saves exactly the named
+    activation families."""
+    names = [n for n in keep_names if n in KNOWN_SITES]
+    return jax.checkpoint_policies.save_only_these_names(*names)
+
+
+def family_of(tensor_name: str) -> str | None:
+    """Map a MONET graph tensor name onto a model activation family."""
+    t = tensor_name.lower()
+    rules = [
+        (r"\.(q|k|v|qkv)\.out", "qkv"),
+        (r"softmax\.out|probs", "attn_probs"),
+        (r"\.(av|merge|proj)\.out", "attn_out"),
+        (r"\.(fc1|gelu|silu|up|gate)\.out", "mlp_hidden"),
+        (r"\.(fc2|down)\.out", "mlp_out"),
+        (r"ln\d?\.out|norm.*\.out", "attn_in"),
+        (r"res\d\.out|add.*\.out", "block_out"),
+        (r"ssm|scan", "ssm_state"),
+    ]
+    for pat, fam in rules:
+        if re.search(pat, t):
+            return fam
+    return None
+
+
+def keepset_to_policy(keep_tensors) -> object:
+    """Full pipeline: MONET keep-set (graph tensor names) → jax policy."""
+    fams = sorted({f for f in (family_of(t) for t in keep_tensors) if f})
+    if not fams:
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.save_only_these_names(*fams)
+
+
+def resolve_remat(policy_name: str | None):
+    """Config-level remat knob → argument for models' scan-block remat.
+
+    Returns (use_remat: bool, policy or None)."""
+    if policy_name in (None, "none"):
+        return False, None
+    if policy_name == "full":
+        return True, None   # jax.checkpoint default: save nothing extra
+    if policy_name in POLICIES:
+        return True, POLICIES[policy_name]
+    if policy_name.startswith("save:"):
+        names = [s for s in policy_name[5:].split(",") if s]
+        return True, policy_from_keep(names)
+    raise ValueError(f"unknown remat policy {policy_name!r}")

@@ -1,0 +1,170 @@
+"""Multi-core list scheduler over a fused-subgraph partition.
+
+Given a WorkloadGraph, an HDA and a partition of the graph into fused
+subgraphs (default: one node per subgraph = layer-by-layer), produce the
+latency / energy / traffic / peak-memory estimate for one iteration.
+
+Pipeline parallelism across heterogeneous engines emerges naturally: each
+subgraph occupies its dominant engine (MAC array vs. vector core), so
+conv/GEMM work and element-wise work overlap — the deployment style the
+paper uses for both the Edge TPU and FuseMax studies (§IV).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+from .accelerators import HDASpec
+from .cost_model import CostModel, NodeCost
+from .graph import GraphError, WorkloadGraph
+
+
+@dataclass
+class ScheduleResult:
+    latency: float                 # cycles (makespan)
+    energy: float                  # pJ, incl. leakage
+    offchip_bytes: float
+    peak_mem: float                # peak live tensor footprint (bytes)
+    activation_bytes: float        # Σ stored fwd→bwd activations (paper metric)
+    per_core_busy: dict = field(default_factory=dict)
+    n_subgraphs: int = 0
+    total_macs: int = 0
+    hda_name: str = ""
+
+    @property
+    def mac_utilization(self) -> float:
+        return self.total_macs / max(self.latency, 1.0)
+
+    def as_row(self) -> dict:
+        return dict(latency=self.latency, energy=self.energy,
+                    offchip_bytes=self.offchip_bytes, peak_mem=self.peak_mem,
+                    activation_bytes=self.activation_bytes,
+                    n_subgraphs=self.n_subgraphs, hda=self.hda_name)
+
+
+def quotient_dag(graph: WorkloadGraph, partition: list) -> tuple[dict, dict]:
+    """Map node→subgraph-index and subgraph adjacency.  Raises on a cyclic
+    quotient (non-convex partition)."""
+    sg_of: dict[str, int] = {}
+    for i, sg in enumerate(partition):
+        for n in sg:
+            if n in sg_of:
+                raise GraphError(f"node {n} in two subgraphs")
+            sg_of[n] = i
+    if len(sg_of) != len(graph.nodes):
+        missing = set(graph.nodes) - set(sg_of)
+        raise GraphError(f"partition does not cover {sorted(missing)[:5]}")
+
+    succ: dict[int, set] = defaultdict(set)
+    pred_count: dict[int, int] = defaultdict(int)
+    for n in graph.nodes:
+        for s in graph.successors(n):
+            a, b = sg_of[n], sg_of[s]
+            if a != b and b not in succ[a]:
+                succ[a].add(b)
+    for a, bs in succ.items():
+        for b in bs:
+            pred_count[b] += 1
+    # acyclicity check
+    q = deque(i for i in range(len(partition)) if pred_count[i] == 0)
+    seen = 0
+    pc = dict(pred_count)
+    while q:
+        x = q.popleft()
+        seen += 1
+        for y in succ.get(x, ()):
+            pc[y] -= 1
+            if pc[y] == 0:
+                q.append(y)
+    if seen != len(partition):
+        raise GraphError("partition quotient graph has a cycle "
+                         "(non-convex fused subgraph)")
+    return sg_of, succ
+
+
+def schedule(graph: WorkloadGraph, hda: HDASpec, partition: list | None = None,
+             tensor_parallel: bool = True) -> ScheduleResult:
+    if partition is None:
+        partition = [(n,) for n in graph.topo_order()]
+    partition = [tuple(sg) for sg in partition]
+    cm = CostModel(graph, hda, tensor_parallel=tensor_parallel)
+    sg_of, succ = quotient_dag(graph, partition)
+
+    costs: list[NodeCost] = [cm.subgraph_cost(list(sg)) for sg in partition]
+
+    # ---- list scheduling over engines ------------------------------------
+    preds: dict[int, set] = defaultdict(set)
+    for a, bs in succ.items():
+        for b in bs:
+            preds[b].add(a)
+    remaining = {i: len(preds[i]) for i in range(len(partition))}
+    # priority = topo index of first node (stable, dependency-friendly)
+    topo_idx = {n: i for i, n in enumerate(graph.topo_order())}
+    prio = {i: min(topo_idx[n] for n in sg) for i, sg in enumerate(partition)}
+
+    core_free: dict[str, float] = defaultdict(float)
+    finish: dict[int, float] = {}
+    ready_time: dict[int, float] = defaultdict(float)
+    ready = sorted((i for i in range(len(partition)) if remaining[i] == 0),
+                   key=prio.get)
+    ready = deque(ready)
+    busy: dict[str, float] = defaultdict(float)
+    makespan = 0.0
+
+    import heapq
+    heap = [(prio[i], i) for i in ready]
+    heapq.heapify(heap)
+    scheduled = 0
+    while heap:
+        _, i = heapq.heappop(heap)
+        c = costs[i]
+        start = max(ready_time[i], core_free[c.core])
+        end = start + c.cycles
+        finish[i] = end
+        core_free[c.core] = end
+        busy[c.core] += c.cycles
+        makespan = max(makespan, end)
+        scheduled += 1
+        for j in succ.get(i, ()):
+            ready_time[j] = max(ready_time[j], end)
+            remaining[j] -= 1
+            if remaining[j] == 0:
+                heapq.heappush(heap, (prio[j], j))
+    if scheduled != len(partition):
+        raise GraphError("scheduler deadlock (cycle?)")
+
+    # ---- memory liveness (topo-step granularity) --------------------------
+    order = sorted(range(len(partition)), key=finish.get)
+    last_use: dict[str, int] = {}
+    prod_step: dict[str, int] = {}
+    for step, i in enumerate(order):
+        for n in partition[i]:
+            nd = graph.nodes[n]
+            for t in nd.inputs:
+                last_use[t] = step
+            for t in nd.outputs:
+                prod_step[t] = step
+    static = sum(t.bytes for t in graph.tensors.values()
+                 if t.is_param or t.is_state or t.is_input)
+    events = defaultdict(float)
+    for t, s in prod_step.items():
+        events[s] += graph.tensors[t].bytes
+        events[last_use.get(t, s) + 1] -= graph.tensors[t].bytes
+    live, peak = static, static
+    for s in sorted(events):
+        live += events[s]
+        peak = max(peak, live)
+
+    energy = sum(c.energy_pj for c in costs) + makespan * hda.leak_per_cycle()
+    return ScheduleResult(
+        latency=makespan,
+        energy=energy,
+        offchip_bytes=sum(c.offchip_bytes for c in costs),
+        peak_mem=peak,
+        activation_bytes=graph.activation_bytes(),
+        per_core_busy=dict(busy),
+        n_subgraphs=len(partition),
+        total_macs=sum(graph.nodes[n].macs for n in graph.nodes),
+        hda_name=hda.name,
+    )

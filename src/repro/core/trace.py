@@ -1,0 +1,262 @@
+"""jaxpr → WorkloadGraph ingestion.
+
+The JAX-native replacement for the paper's ONNX front-end: any jittable
+function (model apply, full train_step) is traced to a jaxpr and converted to
+the MONET IR.  ``jax.grad`` plays the role of ONNX-Runtime-Training — the
+traced train_step already contains forward + backward + optimizer; MONET's
+explicit pass (:mod:`training_transform`) stays the tool of choice when named
+activation edges are needed.
+
+Call-like primitives (pjit, custom_vjp, remat) are inlined.  ``scan`` bodies
+are inlined once with FLOPs scaled by the trip count (node meta records
+``scan_length``) — exact for cost totals, compact for 100-layer models.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+from .graph import Node, TensorSpec, WorkloadGraph
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "neg", "sign", "abs", "erf", "integer_pow",
+    "select_n", "ge", "gt", "le", "lt", "eq", "ne", "and", "or", "not",
+    "xor", "clamp", "floor", "ceil", "round", "stop_gradient", "sin", "cos",
+    "log1p", "expm1", "cbrt", "square", "cumsum", "cumlogsumexp", "rem",
+    "nextafter", "population_count", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "is_finite", "erf_inv", "real", "imag",
+}
+_MOVE = {
+    "reshape", "broadcast_in_dim", "convert_element_type", "transpose",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "squeeze", "expand_dims", "rev", "pad", "gather", "scatter",
+    "scatter-add", "iota", "copy", "device_put", "bitcast_convert_type",
+    "split",
+}
+_REDUCE = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "reduce_precision",
+}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 1
+
+
+class _Tracer:
+    def __init__(self, name: str):
+        self.g = WorkloadGraph(name)
+        self._ctr = 0
+        self.var_tensor: dict[Any, str] = {}
+        self._pins: list = []       # keep var objects alive: ids must not be
+                                    # reused by the allocator mid-trace
+
+    def uid(self, p: str) -> str:
+        self._ctr += 1
+        return f"{p}{self._ctr}"
+
+    def tensor_for(self, var, hint: str = "t", **roles) -> str:
+        key = id(var)
+        if key in self.var_tensor:
+            return self.var_tensor[key]
+        self._pins.append(var)
+        aval = var.aval
+        name = self.uid(hint + "_")
+        dtype = str(aval.dtype) if hasattr(aval, "dtype") else "float32"
+        shape = tuple(int(s) for s in getattr(aval, "shape", ()))
+        self.g.add_tensor(TensorSpec(name, shape, dtype, **roles))
+        self.var_tensor[key] = name
+        return name
+
+    def tensor_for_out(self, var, hint: str = "t") -> str:
+        """Like tensor_for but for eqn *outputs*: if the var was already
+        produced (the same sub-jaxpr object can appear under several call
+        eqns), mint a fresh tensor and rebind the var to it."""
+        name = self.tensor_for(var, hint)
+        if name in self.g.producer:
+            aval = var.aval
+            fresh = self.uid(hint + "_")
+            dtype = str(aval.dtype) if hasattr(aval, "dtype") else "float32"
+            shape = tuple(int(s) for s in getattr(aval, "shape", ()))
+            self.g.add_tensor(TensorSpec(fresh, shape, dtype))
+            self.var_tensor[id(var)] = fresh
+            return fresh
+        return name
+
+    def const_tensor(self, val) -> str:
+        name = self.uid("const_")
+        arr = np.asarray(val)
+        self.g.add_tensor(TensorSpec(name, tuple(arr.shape), str(arr.dtype),
+                                     is_input=True))
+        return name
+
+    # -- eqn processing ------------------------------------------------------
+
+    def process(self, jaxpr, scale: int = 1, prefix: str = "") -> None:
+        from jax.extend import core as jcore  # Literal lives here in new jax
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            sub = _subjaxpr(eqn)
+            if sub is not None:
+                length = 1
+                if prim == "scan":
+                    length = int(eqn.params.get("length", 1))
+                self._bind_sub(sub, eqn)
+                self.process(sub, scale * length, prefix)
+                self._bind_sub_out(sub, eqn)
+                continue
+            ins = []
+            for v in eqn.invars:
+                if hasattr(v, "val"):          # Literal
+                    ins.append(self.const_tensor(v.val))
+                else:
+                    ins.append(self.tensor_for(v, _role_hint(v)))
+            outs = [self.tensor_for_out(v, prim) for v in eqn.outvars]
+            self._emit(prim, eqn, ins, outs, scale, prefix)
+
+    def _bind_sub(self, sub, eqn) -> None:
+        """Alias the sub-jaxpr's invars to the outer tensors."""
+        inner = list(sub.invars) + list(sub.constvars)
+        outer = list(eqn.invars)
+        for iv, ov in zip(sub.invars, outer):
+            self._pins.append(iv)
+            if hasattr(ov, "val"):
+                self.var_tensor[id(iv)] = self.const_tensor(ov.val)
+            else:
+                self.var_tensor[id(iv)] = self.tensor_for(ov)
+
+    def _bind_sub_out(self, sub, eqn) -> None:
+        for sv, ov in zip(sub.outvars, eqn.outvars):
+            self._pins.extend((sv, ov))
+            if hasattr(sv, "val"):
+                self.var_tensor[id(ov)] = self.const_tensor(sv.val)
+            elif id(sv) in self.var_tensor:
+                self.var_tensor[id(ov)] = self.var_tensor[id(sv)]
+            else:
+                self.var_tensor[id(ov)] = self.tensor_for(ov)
+
+    def _emit(self, prim: str, eqn, ins, outs, scale, prefix) -> None:
+        g = self.g
+        name = f"{prefix}{prim}.{self._ctr}"
+        out_aval = eqn.outvars[0].aval if eqn.outvars else None
+        n_out = _size(out_aval) if out_aval is not None else 1
+
+        if prim == "dot_general":
+            dn = eqn.params["dimension_numbers"]
+            (lc, rc), (lb, rb) = dn
+            la = eqn.invars[0].aval
+            ra = eqn.invars[1].aval
+            K = int(np.prod([la.shape[i] for i in lc])) or 1
+            B = int(np.prod([la.shape[i] for i in lb])) or 1
+            M = _size(la) // max(K * B, 1)
+            N = _size(ra) // max(K * B, 1)
+            dims = dict(B=B, M=max(M, 1), N=max(N, 1), K=K)
+            fl = 2 * B * max(M, 1) * max(N, 1) * K * scale
+            g.add_node(Node(name, "gemm", "fwd", dims, ins, outs, fl,
+                            meta={"scan_length": scale}))
+        elif prim == "conv_general_dilated":
+            la = eqn.invars[0].aval
+            ra = eqn.invars[1].aval
+            oa = out_aval
+            dn = eqn.params["dimension_numbers"]
+            # rhs spec: (out_feat, in_feat, *spatial) positions
+            rs = dn.rhs_spec
+            K = int(ra.shape[rs[0]])
+            C = int(ra.shape[rs[1]])
+            spatial_f = [int(ra.shape[i]) for i in rs[2:]]
+            os_ = dn.out_spec
+            Bd = int(oa.shape[os_[0]])
+            sp_o = [int(oa.shape[i]) for i in os_[2:]]
+            OY = sp_o[0] if sp_o else 1
+            OX = sp_o[1] if len(sp_o) > 1 else 1
+            FY = spatial_f[0] if spatial_f else 1
+            FX = spatial_f[1] if len(spatial_f) > 1 else 1
+            groups = int(eqn.params.get("feature_group_count", 1))
+            dims = dict(B=Bd, K=K, C=C, OY=OY, OX=OX, FY=FY, FX=FX)
+            fl = 2 * Bd * K * C * OY * OX * FY * FX // max(groups, 1) * scale
+            g.add_node(Node(name, "conv", "fwd", dims, ins, outs, fl,
+                            meta={"scan_length": scale}))
+        elif prim in _REDUCE:
+            n_in = _size(eqn.invars[0].aval)
+            g.add_node(Node(name, "reduce", "fwd", dict(N=n_in), ins, outs,
+                            n_in * scale, meta={"scan_length": scale}))
+        elif prim in _MOVE:
+            g.add_node(Node(name, "reshape" if prim != "transpose"
+                            else "transpose", "fwd", dict(N=n_out), ins, outs,
+                            0, meta={"scan_length": scale}))
+        else:
+            fl_per = 8 if prim in ("exp", "log", "tanh", "logistic", "erf",
+                                   "pow") else 1
+            g.add_node(Node(name, "elementwise", "fwd", dict(N=n_out), ins,
+                            outs, fl_per * n_out * scale,
+                            meta={"prim": prim, "scan_length": scale}))
+
+
+def _subjaxpr(eqn):
+    p = eqn.params
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p:
+            j = p[key]
+            return getattr(j, "jaxpr", j)
+    if eqn.primitive.name == "scan":
+        j = p.get("jaxpr")
+        return getattr(j, "jaxpr", j)
+    if eqn.primitive.name == "custom_vjp_call" or \
+            eqn.primitive.name == "custom_jvp_call":
+        for key in ("call_jaxpr", "fun_jaxpr"):
+            if key in p:
+                j = p[key]
+                return getattr(j, "jaxpr", j)
+    return None
+
+
+def _role_hint(v) -> str:
+    return "x"
+
+
+def trace_fn(fn, *example_args, name: str = "traced", **kw) -> WorkloadGraph:
+    """Trace ``fn(*example_args)`` (arrays or ShapeDtypeStructs) to a
+    WorkloadGraph."""
+    closed = jax.make_jaxpr(fn, **kw)(*example_args)
+    tr = _Tracer(name)
+    jaxpr = closed.jaxpr
+    for v in jaxpr.invars:
+        tr.tensor_for(v, "in", is_input=True)
+    for v, val in zip(jaxpr.constvars, closed.consts):
+        tr.tensor_for(v, "const", is_input=True)
+    tr.process(jaxpr)
+    g = tr.g
+    g.validate()
+    return g
+
+
+def trace_model(apply_fn, params, *data_args, name: str = "model"
+                ) -> WorkloadGraph:
+    """Trace ``apply_fn(params, *data)`` marking param leaves as is_param."""
+    flat_params, treedef = jax.tree.flatten(params)
+
+    def flat_fn(flat, *data):
+        return apply_fn(jax.tree.unflatten(treedef, flat), *data)
+
+    closed = jax.make_jaxpr(flat_fn)(flat_params, *data_args)
+    tr = _Tracer(name)
+    jaxpr = closed.jaxpr
+    n_p = len(flat_params)
+    for i, v in enumerate(jaxpr.invars):
+        if i < n_p:
+            tr.tensor_for(v, "param", is_param=True)
+        else:
+            tr.tensor_for(v, "in", is_input=True)
+    for v in jaxpr.constvars:
+        tr.tensor_for(v, "const", is_input=True)
+    tr.process(jaxpr)
+    tr.g.validate()
+    return tr.g

@@ -1,0 +1,116 @@
+"""Paper case-study workload graphs: ResNet-18 (§IV-A) and small GPT-2 (§IV-B).
+
+These are the explicit GraphBuilder versions used by the DSE / fusion /
+checkpointing studies, where named activation edges matter.  The *real* JAX
+models live in :mod:`repro.models` and are ingested via jaxpr tracing.
+"""
+
+from __future__ import annotations
+
+from .builders import GraphBuilder
+from .graph import WorkloadGraph
+
+
+def resnet18_graph(batch: int = 1, image: int = 32, num_classes: int = 10,
+                   with_loss: bool = True, dtype: str = "bfloat16"
+                   ) -> WorkloadGraph:
+    """ResNet-18.  ``image=32`` builds the CIFAR-10 stem (3×3/1, no maxpool —
+    the paper's §IV-A setting); ``image=224`` builds the ImageNet stem
+    (7×7/2 + maxpool — the paper's Fig. 12 setting)."""
+    b = GraphBuilder(f"resnet18_b{batch}_i{image}", dtype)
+    x = b.input("image", (batch, 3, image, image))
+
+    if image <= 64:  # CIFAR stem
+        x = b.conv(x, 64, kernel=3, stride=1, name="conv1")
+    else:            # ImageNet stem
+        x = b.conv(x, 64, kernel=7, stride=2, pad=3, name="conv1")
+    x = b.norm(x, name="bn1")
+    x = b.relu(x, name="relu1")
+    if image > 64:
+        x = b.pool(x, kernel=3, stride=2, kind="max", name="maxpool1")
+
+    def basic_block(x, planes, stride, tag):
+        identity = x
+        out = b.conv(x, planes, 3, stride, name=f"{tag}.conv1")
+        out = b.norm(out, name=f"{tag}.bn1")
+        out = b.relu(out, name=f"{tag}.relu1")
+        out = b.conv(out, planes, 3, 1, name=f"{tag}.conv2")
+        out = b.norm(out, name=f"{tag}.bn2")
+        in_c = b.shape(x)[1]
+        if stride != 1 or in_c != planes:
+            identity = b.conv(x, planes, 1, stride, pad=0, name=f"{tag}.down")
+            identity = b.norm(identity, name=f"{tag}.down_bn")
+        out = b.add(out, identity, name=f"{tag}.add")
+        return b.relu(out, name=f"{tag}.relu2")
+
+    planes = [64, 128, 256, 512]
+    for stage, p in enumerate(planes):
+        for blk in range(2):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            x = basic_block(x, p, stride, f"s{stage}b{blk}")
+
+    x = b.global_avg_pool(x, name="gap")
+    logits = b.linear(x, num_classes, name="fc")
+    if with_loss:
+        labels = b.input("labels", (batch,), "int32")
+        b.loss_xent(logits, labels)
+    return b.g
+
+
+def gpt2_graph(batch: int = 1, seq: int = 256, d_model: int = 768,
+               n_layers: int = 12, n_heads: int = 12, vocab: int = 50257,
+               with_loss: bool = True, dtype: str = "bfloat16"
+               ) -> WorkloadGraph:
+    """Small GPT-2: standard pre-LN transformer with causal attention."""
+    b = GraphBuilder(f"gpt2_b{batch}_s{seq}_l{n_layers}", dtype)
+    dh = d_model // n_heads
+    tokens = b.input("tokens", (batch, seq), "int32")
+
+    x = b.embed(tokens, vocab, d_model, name="wte")
+    pos = b.param("wpe", (seq, d_model))
+    x = b.add(x, pos, name="pos_add")
+
+    for li in range(n_layers):
+        t = f"l{li}"
+        h = b.norm(x, kind="layernorm", name=f"{t}.ln1")
+        q = b.linear(h, d_model, name=f"{t}.q")
+        k = b.linear(h, d_model, name=f"{t}.k")
+        v = b.linear(h, d_model, name=f"{t}.v")
+        qh = b.reshape(q, (batch, n_heads, seq, dh), name=f"{t}.qh")
+        kh = b.reshape(k, (batch, n_heads, seq, dh), name=f"{t}.kh")
+        vh = b.reshape(v, (batch, n_heads, seq, dh), name=f"{t}.vh")
+        kt = b.transpose(kh, (0, 1, 3, 2), name=f"{t}.kT")
+        scores = b.matmul(qh, kt, name=f"{t}.qk", op="attention_qk")
+        probs = b.softmax(scores, name=f"{t}.softmax")
+        ctx = b.matmul(probs, vh, name=f"{t}.av", op="attention_av")
+        ctx = b.reshape(ctx, (batch, seq, d_model), name=f"{t}.merge")
+        attn_out = b.linear(ctx, d_model, name=f"{t}.proj")
+        x = b.add(x, attn_out, name=f"{t}.res1")
+
+        h = b.norm(x, kind="layernorm", name=f"{t}.ln2")
+        h = b.linear(h, 4 * d_model, name=f"{t}.fc1")
+        h = b.gelu(h, name=f"{t}.gelu")
+        h = b.linear(h, d_model, name=f"{t}.fc2")
+        x = b.add(x, h, name=f"{t}.res2")
+
+    x = b.norm(x, kind="layernorm", name="ln_f")
+    logits = b.linear(x, vocab, bias=False, name="lm_head")
+    if with_loss:
+        labels = b.input("labels", (batch, seq), "int32")
+        b.loss_xent(logits, labels)
+    return b.g
+
+
+def mlp_graph(batch: int = 8, d_in: int = 64, widths=(128, 128),
+              n_classes: int = 10, with_loss: bool = True) -> WorkloadGraph:
+    """Tiny MLP used by unit tests and the quickstart example."""
+    b = GraphBuilder(f"mlp_b{batch}")
+    x = b.input("x", (batch, d_in))
+    for i, w in enumerate(widths):
+        x = b.linear(x, w, name=f"fc{i}")
+        x = b.relu(x, name=f"relu{i}")
+    logits = b.linear(x, n_classes, name="head")
+    if with_loss:
+        labels = b.input("labels", (batch,), "int32")
+        b.loss_xent(logits, labels)
+    return b.g

@@ -1,0 +1,251 @@
+"""FlashAttention for TPU in Pallas — the paper's layer-fusion flagship
+(§II-C2): QKᵀ → masked online softmax → PV fused in VMEM, never writing the
+S×T score matrix to HBM.
+
+TPU adaptation (vs the CUDA original): tiling is chosen for the 128×128 MXU
+and VMEM residency instead of warps/shared-memory banking — q blocks of
+``block_q`` rows stream from HBM→VMEM via BlockSpec; the full K/V stripe for
+one (batch, kv-head) lives in VMEM (seq·hd·2·2 B ≤ a few MB for 32 k ctx);
+the kv loop is a ``fori_loop`` over ``block_k`` tiles with causality-pruned
+trip count.  GQA is handled by the BlockSpec index map (q-head i reads
+kv-head i//G) — no repeated K/V in HBM.
+
+Backward is the standard two-kernel recompute scheme (dq then dk/dv) using
+the saved per-row logsumexp.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _mask(q_idx, k_idx, causal, window, q_offset):
+    m = None
+    if causal:
+        m = k_idx[None, :] <= (q_idx[:, None] + q_offset)
+    if window is not None:
+        w = (q_idx[:, None] + q_offset) - k_idx[None, :] < window
+        m = w if m is None else (m & w)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, causal,
+                window, block_k, q_offset):
+    bq, hd = q_ref.shape[1], q_ref.shape[2]
+    T = k_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    qi = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+
+    nk = T // block_k
+    if causal:
+        # causality prunes kv blocks beyond the last query row
+        last_q = (pl.program_id(1) + 1) * bq + q_offset
+        nk_eff = jnp.minimum(nk, pl.cdiv(last_q, block_k))
+    else:
+        nk_eff = nk
+
+    def body(i, carry):
+        m, l, acc = carry
+        kb = k_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        vb = v_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ kb.T                                   # (bq, bk)
+        ki = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        msk = _mask(qi, ki, causal, window, q_offset)
+        if msk is not None:
+            s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ vb
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m0, l0, a0))
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = m + jnp.log(l)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, scale=None,
+                        block_q=128, block_k=128, interpret=False):
+    """q: (BH, S, hd); k/v: (BKv, T, hd); G = BH // BKv per batch-head
+    grouping must already be arranged so q row i maps to kv row i // G."""
+    BH, S, hd = q.shape
+    BKv, T, _ = k.shape
+    G = BH // BKv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    grid = (BH, S // block_q)
+
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                               window=window, block_k=block_k,
+                               q_offset=T - S)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, T, hd), lambda i, j: (i // G, 0, 0)),
+            pl.BlockSpec((1, T, hd), lambda i, j: (i // G, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# backward (recompute scheme)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               scale, causal, window, block_k, q_offset):
+    bq, hd = q_ref.shape[1], q_ref.shape[2]
+    T = k_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    qi = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+    nk = T // block_k
+    if causal:
+        last_q = (pl.program_id(1) + 1) * bq + q_offset
+        nk_eff = jnp.minimum(nk, pl.cdiv(last_q, block_k))
+    else:
+        nk_eff = nk
+
+    def body(i, dq):
+        kb = k_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        vb = v_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        s = (q @ kb.T) * scale
+        ki = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        msk = _mask(qi, ki, causal, window, q_offset)
+        if msk is not None:
+            s = jnp.where(msk, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                 # (bq, bk)
+        dp = do @ vb.T
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + ds @ kb
+
+    dq = jax.lax.fori_loop(0, nk_eff, body, jnp.zeros((bq, hd), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *, scale, causal, window, block_q, q_offset):
+    bk, hd = k_ref.shape[1], k_ref.shape[2]
+    S = q_ref.shape[1]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    ki = pl.program_id(1) * bk + jax.lax.iota(jnp.int32, bk)
+    nq = S // block_q
+    if causal:
+        # rows before this kv block can be skipped
+        first_q = pl.program_id(1) * bk - q_offset
+        start = jnp.maximum(first_q // block_q, 0)
+    else:
+        start = 0
+
+    def body(j, carry):
+        dk, dv = carry
+        qb = q_ref[0, pl.ds(j * block_q, block_q), :].astype(jnp.float32)
+        dob = do_ref[0, pl.ds(j * block_q, block_q), :].astype(jnp.float32)
+        lseb = lse_ref[0, pl.ds(j * block_q, block_q)]
+        deltab = delta_ref[0, pl.ds(j * block_q, block_q)]
+        qi = j * block_q + jax.lax.iota(jnp.int32, block_q)
+        s = (qb @ k.T) * scale                        # (bq, bk)
+        msk = _mask(qi, ki, causal, window, q_offset)
+        if msk is not None:
+            s = jnp.where(msk, s, NEG_INF)
+        p = jnp.exp(s - lseb[:, None])
+        dv_new = dv + p.T @ dob
+        dp = dob @ v.T
+        ds = p * (dp - deltab[:, None]) * scale
+        dk_new = dk + ds.T @ qb
+        return dk_new, dv_new
+
+    z = jnp.zeros((bk, hd), jnp.float32)
+    dk, dv = jax.lax.fori_loop(start, nq, body, (z, z))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
+                        scale=None, block_q=128, block_k=128,
+                        interpret=False):
+    BH, S, hd = q.shape
+    BKv, T, _ = k.shape
+    G = BH // BKv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          window=window, block_k=block_k, q_offset=T - S),
+        grid=(BH, S // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, T, hd), lambda i, j: (i // G, 0, 0)),
+            pl.BlockSpec((1, T, hd), lambda i, j: (i // G, 0, 0)),
+            pl.BlockSpec((1, block_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv computed per q-head then reduced over the GQA group
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, q_offset=T - S),
+        grid=(BH, T // block_k),
+        in_specs=[
+            pl.BlockSpec((1, S, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda i, j: (i // G, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda i, j: (i // G, j, 0)),
+            pl.BlockSpec((1, S, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, S), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, S), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, T, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    dk = dk_h.reshape(BKv, G, T, hd).sum(axis=1).astype(k.dtype)
+    dv = dv_h.reshape(BKv, G, T, hd).sum(axis=1).astype(v.dtype)
+    return dq, dk, dv

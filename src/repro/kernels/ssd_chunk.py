@@ -1,0 +1,85 @@
+"""Fused SSD intra-chunk kernel (Mamba-2 state-space duality) in Pallas.
+
+The quadratic-within-chunk part of SSD is the attention-analogue hot loop
+for the attention-free archs (mamba2-1.3b, jamba's mamba layers): per
+(batch·head, chunk) it computes, entirely in VMEM,
+
+    cum     = cumsum(dt)·A                                (Q,)
+    L       = tril(exp(cum_i − cum_j))                    (Q,Q)  decay kernel
+    y_intra = ((C Bᵀ) ⊙ L) @ (x·dt)                       (Q,hp)
+    states  = (B · exp(cum_Q − cum))ᵀ @ (x·dt)            (N,hp) chunk summary
+
+— one HBM round-trip for x/B/C/dt instead of five for the unfused chain,
+and the (Q,Q) decay/attention matrices never leave VMEM.  The (linear)
+inter-chunk recurrence and Y_inter stay in jnp (lax.scan), exactly like the
+model's reference path in models/ssm.py.
+
+Q is the chunk (128/256 → MXU-aligned); hp, N are 64/128 → lane-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+                      y_ref, st_ref, cum_ref):
+    Q, hp = x_ref.shape[2], x_ref.shape[3]
+    N = b_ref.shape[3]
+    x = x_ref[0, 0].astype(jnp.float32)           # (Q, hp)
+    dt = dt_ref[0, 0].astype(jnp.float32)         # (Q,)
+    b = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    a = a_ref[0]                                  # scalar (negative)
+
+    cum = jnp.cumsum(dt) * a                      # (Q,)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    qi = jax.lax.iota(jnp.int32, Q)
+    mask = qi[:, None] >= qi[None, :]
+    decay = jnp.where(mask, decay, 0.0)
+
+    att = (c @ b.T) * decay                       # (Q, Q)
+    dtx = x * dt[:, None]
+    y = att @ dtx                                 # (Q, hp)
+
+    sdecay = jnp.exp(cum[-1] - cum)               # (Q,)
+    states = (b * sdecay[:, None]).T @ dtx        # (N, hp)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = states.astype(st_ref.dtype)
+    cum_ref[0, 0] = cum
+
+
+def ssd_chunk(x, dt, b, c, a, *, interpret=False):
+    """x: (BH, nc, Q, hp); dt: (BH, nc, Q); b/c: (BH, nc, Q, N);
+    a: (BH,) negative decay rates.  Returns (y_intra, states, cum):
+    (BH,nc,Q,hp), (BH,nc,N,hp) fp32, (BH,nc,Q) fp32."""
+    BH, nc, Q, hp = x.shape
+    N = b.shape[-1]
+    grid = (BH, nc)
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, hp), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, hp), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, N, hp), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, nc, Q, hp), x.dtype),
+            jax.ShapeDtypeStruct((BH, nc, N, hp), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, Q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, b, c, a)

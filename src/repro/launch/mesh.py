@@ -1,0 +1,54 @@
+"""Production mesh construction.
+
+Pure functions (importing this module never touches jax device state):
+the dry-run sets XLA_FLAGS for 512 host devices before importing anything.
+
+Mesh shapes:
+  single-pod : (16, 16)      axes ('data', 'model')        = 256 chips
+  multi-pod  : (2, 16, 16)   axes ('pod', 'data', 'model') = 512 chips
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    from jax.sharding import Mesh
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Generic helper for tests (e.g. (2,2,2) on 8 host devices)."""
+    n = math.prod(shape)
+    from jax.sharding import Mesh
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def best_mesh_for(n_devices: int, model_parallel: int = 1,
+                  multi_pod: bool = False):
+    """Elastic fallback: factor whatever devices survive a failure into the
+    nearest valid (pod, data, model) mesh (scale-down restart path)."""
+    mp = min(model_parallel, n_devices)
+    while n_devices % mp:
+        mp -= 1
+    rest = n_devices // mp
+    if multi_pod and rest % 2 == 0 and rest > 2:
+        shape, axes = (2, rest // 2, mp), ("pod", "data", "model")
+    else:
+        shape, axes = (rest, mp), ("data", "model")
+    return make_mesh(shape, axes)

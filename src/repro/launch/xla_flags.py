@@ -1,0 +1,22 @@
+"""Recommended XLA flags for the real-TPU launch (collective overlap /
+latency-hiding scheduler).  The CPU dry-run never sets these; launch
+tooling exports them on actual pods."""
+
+TPU_PERF_FLAGS = " ".join([
+    # overlap collectives with compute (latency-hiding scheduler)
+    "--xla_tpu_enable_latency_hiding_scheduler=true",
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+    "--xla_enable_async_all_gather=true",
+    "--xla_enable_async_collective_permute=true",
+    # aggressive scheduling memory budget (we hillclimbed peak mem down)
+    "--xla_tpu_scheduler_percent_shared_memory_limit=100",
+])
+
+
+def launch_env(multi_pod: bool = False) -> dict:
+    env = {"LIBTPU_INIT_ARGS": TPU_PERF_FLAGS}
+    if multi_pod:
+        env["JAX_COORDINATOR_BIND_ADDRESS"] = "0.0.0.0:8476"
+    return env

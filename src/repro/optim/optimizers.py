@@ -1,0 +1,281 @@
+"""Optimizers (optax-free, pytree-native).
+
+* ``sgd_momentum`` / ``adamw`` — the two optimizers MONET integrates into the
+  training graph (paper §III); AdamW state dtype is configurable (bf16 for
+  the ≥100 B archs so optimizer states fit HBM — the paper's Fig. 3 problem).
+* ``adafactor`` — factored second moment: O(d+f) state instead of O(d·f).
+* ``galore_adamw`` — GaLore-style low-rank projected Adam (paper §II-A cites
+  GaLore as optimizer-state mitigation): moments live in rank-r space.
+
+API: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, step) -> (new_params, new_state)``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable
+    state_axes: Callable            # param_axes tree -> state axes tree
+
+
+def _cast(x, dtype):
+    return x.astype(dtype) if dtype else x
+
+
+def warmup_cosine(base_lr: float, warmup: int = 100, total: int = 10000,
+                  min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd_momentum(lr=1e-2, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda s: lr)
+
+    def init(params):
+        return {"v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        v = jax.tree.map(lambda v, g: momentum * v - lr_t *
+                         g.astype(jnp.float32), state["v"], grads)
+        new_params = jax.tree.map(lambda p, v: (p.astype(jnp.float32) + v
+                                                ).astype(p.dtype), params, v)
+        return new_params, {"v": v}
+
+    def state_axes(param_axes):
+        return {"v": param_axes}
+
+    return Optimizer("sgd_momentum", init, update, state_axes)
+
+
+def adamw(lr=3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01, state_dtype: str | None = "float32"
+          ) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda s: lr)
+    sd = jnp.dtype(state_dtype) if state_dtype else None
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, sd or p.dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr_t * (step_ + weight_decay * p32)
+            return p32.astype(p.dtype), _cast(m32, sd), _cast(v32, sd)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    def state_axes(param_axes):
+        from ..distributed.sharding import Ax, zero_state_axes
+        zero = jax.tree.map(zero_state_axes, param_axes,
+                            is_leaf=lambda x: isinstance(x, Ax))
+        return {"m": zero, "v": zero, "count": Ax(())}
+
+    return Optimizer("adamw", init, update, state_axes)
+
+
+def adafactor(lr=3e-4, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern): O(rows+cols) state for
+    matrices."""
+    lr_fn = lr if callable(lr) else (lambda s: lr)
+
+    def init(params):
+        def z(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(z, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        beta = 1.0 - (count.astype(jnp.float32)) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, f):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * f["c"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (r[..., None] / jnp.maximum(
+                    r.mean(axis=-1, keepdims=True)[..., None], eps)) * \
+                    c[..., None, :]
+                u = g32 / jnp.sqrt(jnp.maximum(denom, eps))
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                nf = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), nf
+
+        flat_p, tp = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_f = tp.flatten_up_to(state["f"])
+        outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_params = jax.tree.unflatten(tp, [o[0] for o in outs])
+        new_f = jax.tree.unflatten(tp, [o[1] for o in outs])
+        return new_params, {"f": new_f, "count": count}
+
+    def state_axes(param_axes):
+        from ..distributed.sharding import Ax
+        def f_axes(a):
+            if len(a.axes) >= 2:
+                return {"r": Ax(a.axes[:-1]), "c": Ax(a.axes[:-2] + a.axes[-1:])}
+            return {"v": a}
+        return {"f": jax.tree.map(f_axes, param_axes,
+                                  is_leaf=lambda x: isinstance(x, Ax)),
+                "count": Ax(())}
+
+    return Optimizer("adafactor", init, update, state_axes)
+
+
+def galore_adamw(lr=3e-4, rank: int = 64, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, seed: int = 17) -> Optimizer:
+    """Low-rank projected Adam (GaLore-flavoured): for 2-D params with
+    min-dim > 4·rank, moments are kept in the rank-r projected space —
+    both an optimizer-memory saving and a gradient-compression hook (the
+    projected gradient is what a multi-pod reduction would ship)."""
+    lr_fn = lr if callable(lr) else (lambda s: lr)
+
+    def _proj(p, i):
+        if p.ndim != 2 or min(p.shape) <= 4 * rank:
+            return None
+        d = p.shape[0]
+        key = jax.random.PRNGKey(seed + i)
+        q, _ = jnp.linalg.qr(jax.random.normal(key, (d, rank), jnp.float32))
+        return q                       # (d, r) orthonormal
+
+    def init(params):
+        leaves, tdef = jax.tree.flatten(params)
+        st = []
+        for i, p in enumerate(leaves):
+            P = _proj(p, i)
+            if P is None:
+                st.append({"m": jnp.zeros(p.shape, jnp.float32),
+                           "v": jnp.zeros(p.shape, jnp.float32)})
+            else:
+                shp = (rank, p.shape[1])
+                st.append({"P": P, "m": jnp.zeros(shp, jnp.float32),
+                           "v": jnp.zeros(shp, jnp.float32)})
+        return {"s": jax.tree.unflatten(tdef, st),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            low_rank = "P" in s
+            if low_rank:
+                gp = s["P"].T @ g32                    # (r, cols) compressed
+            else:
+                gp = g32
+            m = b1 * s["m"] + (1 - b1) * gp
+            v = b2 * s["v"] + (1 - b2) * jnp.square(gp)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            du = s["P"] @ u if low_rank else u
+            new_p = (p.astype(jnp.float32) - lr_t * du).astype(p.dtype)
+            ns = {"m": m, "v": v}
+            if low_rank:
+                ns["P"] = s["P"]
+            return new_p, ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+                {"s": jax.tree.unflatten(tdef, [o[1] for o in outs]),
+                 "count": count})
+
+    def state_axes(param_axes):
+        from ..distributed.sharding import Ax
+
+        def f_axes(a):
+            if len(a.axes) == 2:
+                return {"P": Ax((a.axes[0], None)),
+                        "m": Ax((None, a.axes[1])),
+                        "v": Ax((None, a.axes[1]))}
+            return {"m": a, "v": a}
+
+        return {"s": jax.tree.map(f_axes, param_axes,
+                                  is_leaf=lambda x: isinstance(x, Ax)),
+                "count": Ax(())}
+
+    return Optimizer("galore_adamw", init, update, state_axes)
+
+
+OPTIMIZERS = {
+    "sgd_momentum": sgd_momentum,
+    "adamw": adamw,
+    "adafactor": adafactor,
+    "galore_adamw": galore_adamw,
+}
+
+
+def make_optimizer(name: str, lr=3e-4, state_dtype: str = "float32", **kw
+                   ) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, state_dtype=state_dtype, **kw)
+    return OPTIMIZERS[name](lr, **kw)

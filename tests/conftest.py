@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# must see 1 device; only launch/dryrun.py (and the subprocess sharding
+# tests) force 512/8 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

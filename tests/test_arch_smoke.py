@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU; asserts output shapes + no NaNs (assignment
+deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.data.pipeline import make_batch
+from repro.configs.base import ShapeConfig
+from repro.models import decode_step, init_cache, init_params, logits_fn
+from repro.optim.optimizers import make_optimizer
+from repro.training.train_step import make_serve_step, make_train_step
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    arch = request.param
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return arch, cfg, params
+
+
+def _finite(x) -> bool:
+    return bool(np.all(np.isfinite(np.asarray(x, np.float32))))
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch, cfg, params = arch_setup
+    batch = make_batch(cfg, SMOKE_SHAPE, 0)
+    logits, aux = jax.jit(lambda p, x: logits_fn(p, cfg, x))(
+        params, batch["inputs"])
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert _finite(logits)
+    assert _finite(aux)
+
+
+def test_train_step_updates_and_finite(arch_setup):
+    arch, cfg, params = arch_setup
+    opt = make_optimizer("adamw", 1e-3, state_dtype=cfg.state_dtype)
+    step = jax.jit(make_train_step(cfg, opt))
+    opt_state = opt.init(params)
+    batch = make_batch(cfg, SMOKE_SHAPE, 0)
+    new_params, _, metrics = step(params, opt_state, batch, jnp.int32(0))
+    assert _finite(metrics["loss"]) and metrics["loss"] > 0
+    # params actually moved
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, new_params)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+def test_decode_step_and_cache(arch_setup):
+    arch, cfg, params = arch_setup
+    B, T = 2, 16
+    cache = init_cache(cfg, B, T)
+    serve = jax.jit(make_serve_step(cfg),
+                    static_argnames=()) if False else make_serve_step(cfg)
+    if cfg.input_mode == "tokens":
+        inp = jnp.zeros((B, 1), jnp.int32)
+    else:
+        inp = jnp.zeros((B, 1, cfg.d_model), jnp.bfloat16)
+    nxt, cache = serve(params, cache, inp, jnp.int32(0))
+    assert nxt.shape == (B,)
+    nxt2, cache = serve(params, cache, inp, jnp.int32(1))
+    assert _finite(nxt2)
+
+
+def test_decode_matches_forward_logits(arch_setup):
+    """Greedy decode over a short prompt == argmax of teacher-forced fwd."""
+    arch, cfg, params = arch_setup
+    if cfg.input_mode != "tokens":
+        pytest.skip("embedding-input arch: positions fed by frontend stub")
+    B, S = 1, 8
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (B, S)), jnp.int32)
+    logits, _ = logits_fn(params, cfg, toks)
+    cache = init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = decode_step(params, cache, cfg, toks[:, t:t + 1],
+                                jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    # bf16 params + chunked-vs-recurrent SSD orderings: ~0.07 worst-case
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(logits, np.float32),
+                               atol=1.5e-1, rtol=1e-1)
+
+
+def test_full_config_param_counts():
+    expected = {
+        "nemotron-4-340b": (320e9, 360e9),
+        "gemma3-1b": (0.9e9, 1.2e9),
+        "phi3-medium-14b": (13e9, 16e9),
+        "minicpm3-4b": (3.8e9, 4.8e9),
+        "mamba2-1.3b": (1.2e9, 1.6e9),
+        "olmoe-1b-7b": (6.3e9, 7.5e9),
+        "jamba-1.5-large-398b": (370e9, 420e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("olmoe-1b-7b")
+    assert cfg.active_param_count() < 0.25 * cfg.param_count()

@@ -1,0 +1,148 @@
+"""Activation checkpointing + NSGA-II tests (paper §V-B, Eq. 6)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (activation_set, apply_checkpointing,
+                        build_training_graph, edge_tpu,
+                        evaluate_checkpointing, fast_non_dominated_sort,
+                        ga_checkpointing, knapsack_baseline, mlp_graph,
+                        nsga2, recompute_flops, resnet18_graph, schedule,
+                        stored_activation_bytes)
+
+
+@pytest.fixture(scope="module")
+def tg():
+    return build_training_graph(mlp_graph(batch=16, widths=(64, 64, 64)))
+
+
+@pytest.fixture(scope="module")
+def hda():
+    return edge_tpu()
+
+
+# -- linear baseline -----------------------------------------------------------
+
+
+def test_knapsack_exact_vs_bruteforce(tg):
+    g = tg.graph
+    acts = activation_set(tg)[:8]
+    m = [g.tensors[a].bytes for a in acts]
+    r = [recompute_flops(g, a) for a in acts]
+    budget = sum(m) // 2
+
+    class FakeTG:
+        graph = g
+        activations = acts
+
+    kept, rc = knapsack_baseline(FakeTG(), budget, granularity=1)
+    # brute force
+    best = None
+    for mask in itertools.product([0, 1], repeat=len(acts)):
+        mem = sum(mi for mi, x in zip(m, mask) if x)
+        if mem > budget:
+            continue
+        cost = sum(ri for ri, x in zip(r, mask) if not x)
+        if best is None or cost < best:
+            best = cost
+    assert rc == best
+
+
+def test_knapsack_budget_respected(tg):
+    total = stored_activation_bytes(tg, activation_set(tg))
+    for frac in (0.25, 0.5, 0.75):
+        kept, _ = knapsack_baseline(tg, int(total * frac))
+        assert stored_activation_bytes(tg, kept) <= int(total * frac) + 4096
+
+
+# -- rewrite pass ---------------------------------------------------------------
+
+
+def test_rewrite_validity_and_rewiring(tg):
+    acts = activation_set(tg)
+    keep = set(acts[: len(acts) // 2])
+    g2 = apply_checkpointing(tg, keep)
+    g2.validate()
+    discarded = set(acts) - keep
+    for a in discarded:
+        for c in g2.consumers.get(a, []):
+            assert not g2.nodes[c].kind.startswith("bwd"), \
+                f"bwd consumer {c} still reads discarded {a}"
+    # recompute nodes exist and are marked
+    rc_nodes = [n for n in g2.nodes.values() if n.kind == "recompute"]
+    assert rc_nodes
+
+
+def test_rewrite_noop_when_keep_all(tg):
+    g2 = apply_checkpointing(tg, set(activation_set(tg)))
+    assert len(g2) == len(tg.graph)
+
+
+def test_recompute_shared_not_duplicated():
+    tg = build_training_graph(mlp_graph(batch=4, widths=(32, 32)))
+    g2 = apply_checkpointing(tg, set())         # discard everything
+    rc = [n for n in g2.nodes if n.endswith(".rc")]
+    assert len(rc) == len(set(rc))              # shared clones, no dupes
+
+
+def test_discard_increases_flops_decreases_act_bytes(tg, hda):
+    acts = activation_set(tg)
+    base = evaluate_checkpointing(tg, hda, set(acts))
+    half = evaluate_checkpointing(tg, hda, set(acts[: len(acts) // 2]))
+    assert half.act_bytes < base.act_bytes
+
+
+def test_nonlinearity_hook_exists(hda):
+    """The joint-recompute graph shares clones → joint flops ≤ sum of
+    individual extra flops (super-additivity in the good direction)."""
+    tg = build_training_graph(resnet18_graph(1, 32))
+    acts = activation_set(tg)
+    a0 = "bn1.out" if "bn1.out" in acts else acts[0]
+    a1 = "conv1.out" if "conv1.out" in acts else acts[1]
+    g_full = apply_checkpointing(tg, set(acts))
+    g10 = apply_checkpointing(tg, set(acts) - {a0})
+    g01 = apply_checkpointing(tg, set(acts) - {a1})
+    g11 = apply_checkpointing(tg, set(acts) - {a0, a1})
+    f = lambda g: g.total_flops()
+    d10, d01, d11 = (f(g10) - f(g_full), f(g01) - f(g_full),
+                     f(g11) - f(g_full))
+    assert d11 <= d10 + d01 + 1   # shared ancestors make it sub-additive
+
+
+# -- NSGA-II ---------------------------------------------------------------------
+
+
+def test_nds_correctness():
+    F = np.array([[1, 5], [2, 4], [3, 3], [2, 6], [4, 4]], float)
+    fronts = fast_non_dominated_sort(F)
+    assert sorted(fronts[0].tolist()) == [0, 1, 2]
+
+
+def test_nsga2_on_zdt1():
+    n = 20
+
+    def evaluate(mask):
+        x = mask.astype(float)
+        f1 = x[0]
+        g = 1 + 9 * x[1:].mean()
+        f2 = g * (1 - np.sqrt(f1 / g) if g > 0 else 1)
+        return (f1, f2)
+
+    res = nsga2(evaluate, n, pop_size=24, generations=20, seed=1)
+    # both extremes reachable: f1=0 and f1=1 with low g
+    f1s = res.pareto_F[:, 0]
+    assert f1s.min() == 0.0
+    assert len(res.pareto_F) >= 2
+
+
+def test_ga_checkpointing_pareto(tg, hda):
+    res = ga_checkpointing(tg, hda, pop_size=10, generations=5, seed=0)
+    assert len(res.pareto) >= 1
+    # front is mutually non-dominated
+    F = np.array([[s.latency, s.energy, s.act_bytes] for s in res.pareto])
+    fronts = fast_non_dominated_sort(F)
+    assert len(fronts[0]) == len(F)
+    # memory savings exist on the front
+    assert min(s.act_bytes for s in res.pareto) < res.baseline.act_bytes

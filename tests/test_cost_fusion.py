@@ -1,0 +1,171 @@
+"""Cost model, scheduler, and fusion-solver tests (paper §II-B, §V-A)."""
+
+import pytest
+
+from repro.core import (CostModel, FusionConfig, GraphError,
+                        build_training_graph, edge_tpu, enumerate_candidates,
+                        fusemax, gpt2_graph, layer_by_layer, manual_fusion,
+                        mlp_graph, quotient_dag, resnet18_graph, schedule,
+                        solve_cover, solve_fusion, tpu_v5e_like)
+
+
+@pytest.fixture(scope="module")
+def rn():
+    return resnet18_graph(1, 32)
+
+
+@pytest.fixture(scope="module")
+def hda():
+    return edge_tpu()
+
+
+# -- cost model ---------------------------------------------------------------
+
+
+def test_more_pes_not_slower(rn):
+    small = schedule(rn, edge_tpu(x_pes=2, y_pes=2))
+    big = schedule(rn, edge_tpu(x_pes=8, y_pes=8))
+    assert big.latency <= small.latency
+
+
+def test_bigger_batch_costs_more(hda):
+    r1 = schedule(resnet18_graph(1, 32), hda)
+    r4 = schedule(resnet18_graph(4, 32), hda)
+    assert r4.latency > r1.latency
+    assert r4.energy > r1.energy
+    assert r4.peak_mem > r1.peak_mem
+
+
+def test_training_costs_more_than_inference(rn, hda):
+    inf = schedule(rn, hda)
+    tr = schedule(build_training_graph(rn).graph, hda)
+    assert tr.latency > 2 * inf.latency
+    assert tr.energy > 2 * inf.energy
+
+
+def test_node_cost_roofline_overlap(rn, hda):
+    cm = CostModel(rn, hda)
+    for n in list(rn.nodes)[:10]:
+        c = cm.node_cost(rn.nodes[n])
+        assert c.cycles >= 1.0
+        assert c.energy_pj > 0
+        mem_cycles = c.offchip_bytes / hda.offchip_bw
+        comp = c.cycles
+        assert comp >= mem_cycles * 0.999 or comp >= 1.0
+
+
+def test_fused_subgraph_saves_offchip(rn, hda):
+    cm = CostModel(rn, hda)
+    pair = ["conv1", "bn1"]
+    fused = cm.subgraph_cost(pair)
+    split = cm.node_cost(rn.nodes["conv1"]) + cm.node_cost(rn.nodes["bn1"])
+    assert fused.offchip_bytes < split.offchip_bytes
+
+
+def test_tpu_core_peak_flops():
+    hda = tpu_v5e_like()
+    # 2 MACs/flop × macs/cycle × freq ≈ 197 TFLOP/s
+    peak = 2 * hda.compute_cores()[0].peak_macs * hda.freq_ghz * 1e9
+    assert abs(peak - 197e12) / 197e12 < 0.02
+
+
+# -- scheduler ----------------------------------------------------------------
+
+
+def test_schedule_covers_and_is_deterministic(rn, hda):
+    r1 = schedule(rn, hda)
+    r2 = schedule(rn, hda)
+    assert r1.latency == r2.latency and r1.energy == r2.energy
+    assert r1.n_subgraphs == len(rn)
+
+
+def test_quotient_cycle_rejected(rn, hda):
+    # conv1 and relu1 with bn1 outside is non-convex: conv1→bn1→relu1
+    bad = [("conv1", "relu1")] + [(n,) for n in rn.topo_order()
+                                  if n not in ("conv1", "relu1")]
+    with pytest.raises(GraphError):
+        schedule(rn, hda, bad)
+
+
+def test_partition_must_cover(rn, hda):
+    part = [(n,) for n in list(rn.topo_order())[:-1]]
+    with pytest.raises(GraphError):
+        schedule(rn, hda, part)
+
+
+def test_pipeline_overlap_on_two_engines(rn, hda):
+    r = schedule(rn, hda)
+    busy = sum(r.per_core_busy.values())
+    assert r.latency <= busy  # engines overlap (≤, usually <)
+
+
+# -- fusion -------------------------------------------------------------------
+
+
+def test_candidates_respect_constraints(rn, hda):
+    cfg = FusionConfig(max_len=6, max_conv=2, max_gemm=1)
+    cands = enumerate_candidates(rn, hda, cfg)
+    assert cands
+    for c in cands:
+        assert len(c) <= cfg.max_len
+        n_conv = sum(1 for n in c if rn.nodes[n].op_class == "conv")
+        n_gemm = sum(1 for n in c if rn.nodes[n].op_class == "gemm")
+        assert n_conv <= cfg.max_conv and n_gemm <= cfg.max_gemm
+
+
+def test_candidates_single_external_output(rn, hda):
+    cands = enumerate_candidates(rn, hda, FusionConfig(max_len=5))
+    for c in [c for c in cands if len(c) > 1][:200]:
+        nodes = set(c)
+        ext = sum(1 for n in c
+                  if any(s not in nodes for s in rn.successors(n)))
+        assert ext <= 1
+
+
+def test_solution_is_exact_cover(rn, hda):
+    part = solve_fusion(rn, hda, FusionConfig(max_len=6, time_limit_s=3))
+    seen = [n for sg in part for n in sg]
+    assert sorted(seen) == sorted(rn.nodes)
+    quotient_dag(rn, part)   # acyclic
+
+
+def test_fusion_beats_layer_by_layer(rn, hda):
+    base = schedule(rn, hda, layer_by_layer(rn))
+    fused = schedule(rn, hda, solve_fusion(rn, hda,
+                                           FusionConfig(max_len=6,
+                                                        time_limit_s=3)))
+    assert fused.latency < base.latency
+    assert fused.energy < base.energy
+    assert fused.n_subgraphs < base.n_subgraphs
+
+
+def test_fusion_on_training_graph(hda):
+    tg = build_training_graph(mlp_graph(batch=16, widths=(64, 64))).graph
+    part = solve_fusion(tg, hda, FusionConfig(max_len=6, time_limit_s=3))
+    base = schedule(tg, hda)
+    fused = schedule(tg, hda, part)
+    assert fused.energy <= base.energy
+    quotient_dag(tg, part)
+
+
+def test_manual_fusion_valid(rn, hda):
+    part = manual_fusion(rn)
+    quotient_dag(rn, part)
+    r = schedule(rn, hda, part)
+    assert r.n_subgraphs < len(rn)
+
+
+def test_solve_cover_minimality():
+    # hand-built instance with known optimum 2
+    cands = [("a", "b"), ("c", "d"), ("a",), ("b",), ("c",), ("d",),
+             ("b", "c")]
+    idx = {k: i for i, k in enumerate("abcd")}
+    sol = solve_cover(4, cands, idx, time_limit_s=2)
+    assert len(sol) == 2
+
+
+def test_gpt2_fusion_runs(hda):
+    g = gpt2_graph(1, 64, 64, 2, 2, 256)
+    part = solve_fusion(g, fusemax(), FusionConfig(max_len=5, time_limit_s=3))
+    r = schedule(g, fusemax(), part)
+    assert r.latency > 0

@@ -1,0 +1,122 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FusionConfig, GraphBuilder, build_training_graph,
+                        edge_tpu, knapsack_baseline, quotient_dag, schedule,
+                        solve_fusion, stored_activation_bytes,
+                        activation_set)
+from repro.core.nsga2 import crowding_distance, fast_non_dominated_sort
+from repro.distributed.sharding import prune_pspec
+from jax.sharding import PartitionSpec as P
+
+
+# -- random forward graphs -------------------------------------------------
+
+
+def random_mlp(widths, batch):
+    b = GraphBuilder(f"rand_{len(widths)}_{batch}")
+    x = b.input("x", (batch, 16))
+    skip = None
+    for i, w in enumerate(widths):
+        x = b.linear(x, w, name=f"fc{i}")
+        if i % 2 == 0:
+            x = b.relu(x, name=f"relu{i}")
+        else:
+            x = b.gelu(x, name=f"gelu{i}")
+        if skip is not None and b.shape(skip) == b.shape(x):
+            x = b.add(x, skip, name=f"add{i}")
+        skip = x
+    logits = b.linear(x, 8, name="head")
+    b.loss_xent(logits, b.input("labels", (batch,), "int32"))
+    return b.g
+
+
+widths_st = st.lists(st.sampled_from([16, 32, 64]), min_size=1, max_size=5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(widths=widths_st, batch=st.sampled_from([1, 4]),
+       opt=st.sampled_from(["sgd", "sgd_momentum", "adam", "adamw"]))
+def test_training_transform_invariants(widths, batch, opt):
+    fwd = random_mlp(widths, batch)
+    tg = build_training_graph(fwd, opt)
+    g = tg.graph
+    g.validate()
+    # every original param has a gradient and a .next output
+    for t in fwd.tensors.values():
+        if t.is_param:
+            assert t.name in tg.param_grads
+            assert f"{t.name}.next" in g.tensors
+    # bwd flops ≥ fwd flops (at least the weight-grad side exists)
+    fwd_fl = sum(n.flops for n in g.nodes.values() if n.kind == "fwd")
+    bwd_fl = sum(n.flops for n in g.nodes.values()
+                 if n.kind.startswith("bwd"))
+    assert bwd_fl >= fwd_fl * 0.8
+    # activation set non-empty and all in 𝒜 are produced by fwd
+    assert tg.activations
+
+
+@settings(max_examples=10, deadline=None)
+@given(widths=widths_st, batch=st.sampled_from([1, 4]))
+def test_fusion_partition_exact_cover(widths, batch):
+    g = random_mlp(widths, batch)
+    hda = edge_tpu()
+    part = solve_fusion(g, hda, FusionConfig(max_len=4, time_limit_s=1))
+    nodes = [n for sg in part for n in sg]
+    assert sorted(nodes) == sorted(g.nodes)          # exactly once
+    quotient_dag(g, part)                            # acyclic
+    r = schedule(g, hda, part)
+    base = schedule(g, hda)
+    assert r.latency <= base.latency * 1.001
+
+
+@settings(max_examples=15, deadline=None)
+@given(widths=widths_st, frac=st.floats(0.1, 0.9))
+def test_knapsack_budget_property(widths, frac):
+    tg = build_training_graph(random_mlp(widths, 2))
+    total = stored_activation_bytes(tg, activation_set(tg))
+    budget = int(total * frac)
+    kept, _ = knapsack_baseline(tg, budget)
+    assert stored_activation_bytes(tg, kept) <= budget + 4096
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 40), m=st.integers(2, 4), seed=st.integers(0, 99))
+def test_nds_front_is_nondominated(n, m, seed):
+    rng = np.random.default_rng(seed)
+    F = rng.integers(0, 5, size=(n, m)).astype(float)
+    fronts = fast_non_dominated_sort(F)
+    assert sum(len(f) for f in fronts) == n
+    f0 = fronts[0]
+    for i in f0:
+        for j in f0:
+            dominates = np.all(F[j] <= F[i]) and np.any(F[j] < F[i])
+            assert not dominates
+    cd = crowding_distance(F[f0])
+    assert np.all(cd >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dims=st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 64]),
+                     min_size=1, max_size=4))
+def test_prune_pspec_divisibility(dims):
+    import os
+    # synthesize a fake 2x2 mesh on CPU without forking
+    devs = jax.devices()
+    if len(devs) < 1:
+        return
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(devs[:1]).reshape(1, 1), ("data", "model"))
+    spec = P(*(["data", "model"] + [None] * (len(dims) - 2))[: len(dims)])
+    pruned = prune_pspec(tuple(dims), spec, mesh)
+    for d, part in zip(dims, tuple(pruned) + (None,) * len(dims)):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        prod = 1
+        for a in axes:
+            prod *= int(mesh.shape[a])
+        assert d % prod == 0

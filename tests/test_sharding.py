@@ -1,0 +1,134 @@
+"""Distribution-layer tests: logical rules, pruning, elastic mesh, and a
+subprocess mini dry-run on 8 fake host devices (the tiny twin of the
+512-device production dry-run)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (RULES, ax, pspec, prune_pspec,
+                                        rules_override, shardings_for,
+                                        tree_pspecs, use_mesh,
+                                        zero_state_axes)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def mesh_1x1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def test_pspec_resolution():
+    m = mesh_1x1()
+    assert pspec(("batch", "seq", "embed_act"), m) == P(("data",), None, None)
+    assert pspec(("embed", "ffn"), m) == P("data", "model")
+
+
+def test_pspec_dedup_axes():
+    """A physical axis is never used twice in one spec."""
+    m = mesh_1x1()
+    s = pspec(("batch", "embed"), m)      # both want 'data'
+    used = [p for p in s if p is not None]
+    flat = []
+    for u in used:
+        flat.extend(u if isinstance(u, tuple) else [u])
+    assert len(flat) == len(set(flat))
+
+
+def test_rules_override_ctx():
+    m = mesh_1x1()
+    with rules_override(batch=(), kv_seq=("data",)):
+        assert pspec(("batch",), m) == P(None)
+        assert pspec(("kv_seq",), m) == P("data")
+    assert pspec(("batch",), m) == P(("data",))
+
+
+def test_unknown_axis_raises():
+    with pytest.raises(KeyError):
+        pspec(("nonsense",), mesh_1x1())
+
+
+def test_zero_state_axes():
+    a = ax("embed", "ffn")
+    z = zero_state_axes(a)
+    assert z.axes == ("zero", "ffn")
+
+
+def test_prune_pspec():
+    m = mesh_1x1()
+    # size-1 dims keep only dividing axes (mesh axes are size 1 here: all ok)
+    s = prune_pspec((1, 8), P("data", "model"), m)
+    assert s == P("data", "model")
+
+
+def test_shardings_for_prunes_indivisible():
+    devs = jax.devices()
+    m = Mesh(np.array(devs[:1]).reshape(1, 1), ("data", "model"))
+    tree = {"w": jax.ShapeDtypeStruct((3, 8), jax.numpy.float32)}
+    axes = {"w": ax("embed", "ffn")}
+    sh = shardings_for(tree, axes, m)
+    assert sh["w"].spec == P("data", "model")   # size-1 axes divide anything
+
+
+MINI_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, {repo!r} + "/src")
+    from repro.launch.mesh import make_mesh
+    from repro.launch.cell import lower_cell
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    out = {{}}
+    for arch, shape in {cells}:
+        res, compiled = lower_cell(arch, shape, mesh)
+        out[f"{{arch}}:{{shape}}"] = dict(error=res.error,
+                                          flops=res.flops,
+                                          n_coll=res.n_collectives,
+                                          coll=res.collective_total)
+    print("JSON::" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_mini_multipod_dryrun():
+    """2×2×2 multi-pod mesh on 8 host devices: lower+compile a train cell, a
+    decode cell and a long-context cell; collectives must exist."""
+    cells = [("gemma3-1b", "train_4k"), ("mamba2-1.3b", "decode_32k"),
+             ("jamba-1.5-large-398b", "long_500k")]
+    script = MINI_DRYRUN.format(repo=REPO, cells=repr(cells))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = [l for l in proc.stdout.splitlines() if l.startswith("JSON::")]
+    assert payload, proc.stdout[-2000:]
+    out = json.loads(payload[0][6:])
+    for cell, row in out.items():
+        assert not row["error"], (cell, row["error"][:300])
+        assert row["flops"] > 0
+        assert row["n_coll"] > 0, f"{cell}: no collectives in HLO?"
+
+
+def test_collective_parser():
+    from repro.launch.cell import collective_bytes_from_hlo
+    hlo = """
+      %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={}
+      %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%sum
+      %cp = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) collective-permute(%z)
+      %dd = f32[4]{0} all-reduce-done(%ar.1)
+      %other = f32[999]{0} add(%a, %b)
+    """
+    out, n = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["collective-permute"] == 2 * 64 * 2
+    assert n == 3
