@@ -1,0 +1,65 @@
+"""Evaluation-engine microbenchmark: cold vs. warm cost evaluation.
+
+Quantifies what the signature-memoizing engine (src/repro/core/engine.py)
+buys on the two hot call patterns every experiment reduces to:
+
+* ``engine_cold``  — first full ``schedule()`` of a training graph on a fresh
+  engine (every node signature missed, costs computed once);
+* ``engine_warm``  — repeated ``schedule()`` of the same bound pair (full
+  ScheduleResult memo hit);
+* ``engine_delta`` — schedule of a checkpointing *rewrite* of the same graph
+  through a shared engine (only the rewrite's delta is re-costed);
+* ``engine_ref``   — the direct CostModel reference path, for scale.
+"""
+
+from __future__ import annotations
+
+from repro.core import (activation_set, apply_checkpointing,
+                        build_training_graph, edge_tpu, manual_fusion,
+                        resnet18_graph, schedule)
+from repro.core.engine import EvalEngine
+from repro.core.fusion import repair_partition
+
+from .common import emit, timed
+
+
+def run(image: int = 64):
+    hda = edge_tpu()
+    tg = build_training_graph(resnet18_graph(1, image), "adam")
+    g = tg.graph
+    part = repair_partition(g, manual_fusion(g))
+
+    eng = EvalEngine(hda)
+    _, us_cold = timed(schedule, g, hda, part, engine=eng)
+    emit("engine_cold", us_cold,
+         f"nodes={len(g)};sg_misses={eng.stats['sg_misses']};"
+         f"node_misses={eng.stats['node_misses']}")
+
+    reps = 20
+    _, us_warm = timed(lambda: [schedule(g, hda, part, engine=eng)
+                                for _ in range(reps)])
+    emit("engine_warm", us_warm / reps,
+         f"sched_hits={eng.stats['sched_hits']};speedup_vs_cold="
+         f"{us_cold / max(us_warm / reps, 1e-9):.0f}x")
+
+    acts = activation_set(tg)
+    g2 = apply_checkpointing(tg, set(acts[::2]))
+    part2, q2 = repair_partition(g2, manual_fusion(g2), return_quotient=True)
+    miss0 = eng.stats["sg_misses"]
+    _, us_delta = timed(schedule, g2, hda, part2, engine=eng, quotient=q2)
+    emit("engine_delta", us_delta,
+         f"new_sg_misses={eng.stats['sg_misses'] - miss0};"
+         f"of={len(part2)}")
+
+    _, us_ref = timed(schedule, g, hda, part, use_engine=False)
+    emit("engine_ref_costmodel", us_ref,
+         f"cold/ref={us_cold / max(us_ref, 1e-9):.2f};"
+         f"warm/ref={us_warm / reps / max(us_ref, 1e-9):.3f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

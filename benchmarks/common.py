@@ -7,8 +7,12 @@ import json
 import os
 import time
 
-ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "artifacts")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts")
+
+#: every emit() lands here so the harness can dump a machine-readable
+#: BENCH_eval.json for cross-PR perf tracking (benchmarks/run.py --json)
+RECORDS: list = []
 
 
 def timed(fn, *args, **kw):
@@ -18,7 +22,28 @@ def timed(fn, *args, **kw):
 
 
 def emit(name: str, us: float, derived: str) -> None:
+    RECORDS.append(dict(name=name, us_per_call=round(us, 1), derived=derived))
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_bench_json(path: str | None = None) -> str:
+    """Write every emitted benchmark row to ``BENCH_eval.json`` (repo root by
+    default) so the perf trajectory is tracked across PRs.  Merges into any
+    existing record, so a filtered run (``--only``) updates its entries
+    without clobbering the rest."""
+    path = path or os.path.join(ROOT, "BENCH_eval.json")
+    record: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                record = json.load(f)
+        except (OSError, ValueError):
+            record = {}
+    record.update({r["name"]: {"us_per_call": r["us_per_call"],
+                               "derived": r["derived"]} for r in RECORDS})
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
 
 
 def dump(name: str, rows: list) -> str:

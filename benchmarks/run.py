@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows; artifacts land in artifacts/.
 
   python -m benchmarks.run              # everything (roofline w/o recon)
   python -m benchmarks.run --fast       # trimmed sweeps for CI
+  python -m benchmarks.run --fast --json   # + BENCH_eval.json perf record
   ROOFLINE_RECONSTRUCT=1 python -m benchmarks.run --only roofline
 """
 
@@ -14,14 +15,17 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 
-from benchmarks import (bench_checkpointing, bench_dse, bench_fusion,
-                        bench_misc)
+from benchmarks import (bench_checkpointing, bench_dse, bench_engine,
+                        bench_fusion, bench_misc, common)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_eval.json (us_per_call per entry) "
+                         "for cross-PR perf tracking")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -40,6 +44,8 @@ def main() -> None:
         bench_fusion.run(time_limit=3.0 if args.fast else 8.0)
     if want("fig11"):
         bench_checkpointing.run_fig11()
+    if want("engine"):
+        bench_engine.run()
     if want("fig12"):
         bench_checkpointing.run_fig12(pop=8 if args.fast else 16,
                                       gens=4 if args.fast else 10)
@@ -54,6 +60,13 @@ def main() -> None:
             roofline.main()
         except Exception as e:  # dry-run artifacts may not exist yet
             print(f"roofline,0.0,skipped({type(e).__name__}: {e})")
+
+    if args.json:
+        if common.RECORDS:
+            print(f"# wrote {common.write_bench_json()}", file=sys.stderr)
+        else:
+            print("# no benchmark entries ran — BENCH_eval.json not written",
+                  file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Lightweight CI: tier-1 tests + fast benchmark sweep with perf record.
+#
+#   scripts/ci.sh            # full tier-1 (skips hypothesis tests if absent)
+#   CI_SKIP_SLOW=1 scripts/ci.sh   # core model/engine tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if ! python -c "import hypothesis" 2>/dev/null; then
+    echo "ci: hypothesis not installed — skipping tests/test_property.py"
+    PYTEST_ARGS+=(--ignore=tests/test_property.py)
+fi
+
+if [[ "${CI_SKIP_SLOW:-0}" == "1" ]]; then
+    python -m pytest "${PYTEST_ARGS[@]}" \
+        tests/test_graph.py tests/test_trace.py tests/test_cost_fusion.py \
+        tests/test_checkpointing.py tests/test_engine_parity.py
+else
+    python -m pytest "${PYTEST_ARGS[@]}"
+fi
+
+# fast benchmark sweep; BENCH_eval.json records the perf trajectory per PR
+python -m benchmarks.run --fast --json

@@ -6,6 +6,7 @@ Layers:
   training_transform          — fwd → fwd+bwd+optimizer graph pass
   trace                       — jaxpr → IR ingestion (JAX-native front-end)
   accelerators / cost_model / scheduling — HDA performance & energy model
+  engine                      — signature-memoizing evaluation engine (hot path)
   fusion                      — constraint-based layer-fusion IP solver
   checkpointing / nsga2       — activation-checkpointing GA (+MILP baseline)
   dse                         — hardware design-space sweeps
@@ -22,6 +23,8 @@ from .checkpointing import (ACResult, ACSolution, activation_set,
                             recompute_flops, stored_activation_bytes)
 from .cost_model import CostModel, NodeCost
 from .dse import DSEPoint, compute_resource, pareto_front, spread, sweep
+from .engine import (EvalEngine, GraphSigs, clear_engines, get_engine,
+                     graph_sigs)
 from .fusion import (FusionConfig, enumerate_candidates, layer_by_layer,
                      manual_fusion, solve_cover, solve_fusion)
 from .graph import GraphError, Node, TensorSpec, WorkloadGraph

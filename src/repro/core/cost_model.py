@@ -97,6 +97,53 @@ def compute_cycles(node: Node, core: CoreSpec, tp: int = 1) -> float:
 
 
 # ---------------------------------------------------------------------------
+# pure arithmetic kernels (shared with the evaluation engine)
+# ---------------------------------------------------------------------------
+
+
+def node_cost_arith(cyc: float, inb: float, outb: float,
+                    stationary: float | None, streamed: float,
+                    macs: int, eb: int, core: CoreSpec,
+                    hda: HDASpec) -> NodeCost:
+    """Roofline arithmetic on precomputed scalars.  ``stationary`` is None
+    when the stationary-operand chunking rule does not apply."""
+    offchip = inb + outb
+    if stationary is not None:
+        cap = max(core.local.size * core.count, 1)
+        chunks = max(1, math.ceil(stationary / cap))
+        if chunks > 1:
+            offchip += streamed * (chunks - 1)
+    reuse = max(1.0, math.sqrt(core.rf.size / max(2 * eb, 1)) / 4)
+    local = offchip + 2 * macs * eb / reuse
+    mem_cycles = max(offchip / max(hda.offchip_bw, 1e-9),
+                     local / max(core.local.bw * core.count, 1e-9))
+    cycles = max(cyc, mem_cycles)
+    energy = (macs * core.e_mac +
+              local * core.local.e_per_byte +
+              offchip * hda.offchip_e)
+    return NodeCost(cycles, offchip, local, 0.0, energy, core.name)
+
+
+def subgraph_tail(per_core_cycles: dict, offchip: float, local: float,
+                  link: float, energy: float, internal_bytes: int,
+                  compute_core: CoreSpec, simd_core: CoreSpec,
+                  hda: HDASpec) -> NodeCost:
+    """Final reduction of a fused-subgraph cost from accumulated per-node
+    terms (identical to the tail of ``CostModel.subgraph_cost``)."""
+    energy += link * hda.link_e
+    local_level = compute_core.local
+    energy += 2 * internal_bytes * local_level.e_per_byte
+    local += 2 * internal_bytes
+    mem_cycles = max(offchip / max(hda.offchip_bw, 1e-9),
+                     local / max(local_level.bw * compute_core.count, 1e-9),
+                     link / max(hda.link_bw, 1e-9))
+    cycles = max(max(per_core_cycles.values(), default=1.0), mem_cycles)
+    core = max(per_core_cycles, key=per_core_cycles.get) \
+        if per_core_cycles else simd_core.name
+    return NodeCost(cycles, offchip, local, link, energy, core)
+
+
+# ---------------------------------------------------------------------------
 # cost model bound to a graph + HDA
 # ---------------------------------------------------------------------------
 
@@ -154,7 +201,7 @@ class CostModel:
 
         # stationary-operand chunking: if the stationary operand spills the
         # local SRAM, streamed operands are reloaded per chunk.
-        offchip = inb + outb
+        stationary = streamed = None
         if node.op_class in ("conv", "gemm") and len(node.inputs) >= 2:
             if core.dataflow == "ws":
                 stationary = self.nbytes(node.inputs[1])       # weights
@@ -163,26 +210,13 @@ class CostModel:
             else:  # output-stationary
                 stationary = sum(self.nbytes(t) for t in node.outputs)
                 streamed = inb
-            cap = max(core.local.size * core.count, 1)
-            chunks = max(1, math.ceil(stationary / cap))
-            if chunks > 1:
-                offchip += streamed * (chunks - 1)
 
         # local traffic: every off-chip byte passes through local SRAM, plus
         # MAC operand traffic filtered by register-file reuse (~√RF).
         eb = dtype_bytes(self.g.tensors[node.outputs[0]].dtype
                          if node.outputs else "bfloat16")
-        reuse = max(1.0, math.sqrt(core.rf.size / max(2 * eb, 1)) / 4)
-        local = offchip + 2 * node.macs * eb / reuse
-
-        mem_cycles = max(offchip / max(self.hda.offchip_bw, 1e-9),
-                         local / max(core.local.bw * core.count, 1e-9))
-        cycles = max(cyc, mem_cycles)
-
-        energy = (node.macs * core.e_mac +
-                  local * core.local.e_per_byte +
-                  offchip * self.hda.offchip_e)
-        return NodeCost(cycles, offchip, local, 0.0, energy, core.name)
+        return node_cost_arith(cyc, inb, outb, stationary, streamed or 0,
+                               node.macs, eb, core, self.hda)
 
     # -- fused subgraph cost ----------------------------------------------------
 
@@ -218,17 +252,8 @@ class CostModel:
             for cons in self.g.consumers.get(t, []):
                 if self.core_for(self.g.nodes[cons]).name != prod_core:
                     link += self.nbytes(t)
-        energy += link * self.hda.link_e
         # internal tensors still cost local SRAM round-trips
         internal_bytes = sum(self.nbytes(t) for t in internal)
-        local_level = self._compute.local
-        energy += 2 * internal_bytes * local_level.e_per_byte
-        local += 2 * internal_bytes
-
-        mem_cycles = max(offchip / max(self.hda.offchip_bw, 1e-9),
-                         local / max(local_level.bw * self._compute.count, 1e-9),
-                         link / max(self.hda.link_bw, 1e-9))
-        cycles = max(max(per_core_cycles.values(), default=1.0), mem_cycles)
-        core = max(per_core_cycles, key=per_core_cycles.get) \
-            if per_core_cycles else self._simd.name
-        return NodeCost(cycles, offchip, local, link, energy, core)
+        return subgraph_tail(per_core_cycles, offchip, local, link, energy,
+                             internal_bytes, self._compute, self._simd,
+                             self.hda)

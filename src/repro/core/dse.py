@@ -11,6 +11,7 @@ import random
 from dataclasses import dataclass
 
 from .accelerators import HDASpec, edge_tpu, fusemax, grid
+from .engine import get_engine
 from .fusion import manual_fusion
 from .graph import WorkloadGraph
 from .scheduling import ScheduleResult, schedule
@@ -43,6 +44,10 @@ def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
     points: list[DSEPoint] = []
     for cfg in configs:
         hda = make_hda(**cfg)
+        # one engine per architecture; graph-side signature tables are shared
+        # across every config in the sweep (cached on the graphs), so only
+        # architecture-dependent cost arithmetic is re-evaluated per point
+        engine = get_engine(hda)
         results = {}
         for wname, g in workloads.items():
             part = None
@@ -50,7 +55,7 @@ def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
                 if wname not in parts:
                     parts[wname] = manual_fusion(g)
                 part = parts[wname]
-            results[wname] = schedule(g, hda, part)
+            results[wname] = schedule(g, hda, part, engine=engine)
         points.append(DSEPoint(cfg, hda.name, results))
     return points
 

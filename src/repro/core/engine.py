@@ -1,0 +1,495 @@
+"""Vectorized, cache-aware evaluation engine for the schedule/cost hot paths.
+
+Every MONET experiment — DSE sweeps, the fusion solver, the NSGA-II
+activation-checkpointing GA — bottoms out in thousands of near-identical
+calls to ``schedule()`` → ``subgraph_cost()`` → ``node_cost()``.  This module
+makes repeated evaluation cheap *by construction*:
+
+1.  **Structure-of-arrays signature precomputation.**  Per graph (cached on
+    the graph, keyed by its structural version) every node is reduced to a
+    canonical *cost signature* ``(op_class, sorted dims, flops, per-input
+    bytes + duplicate pattern, per-output bytes, element bytes)``.  Repeated
+    transformer blocks and ``.rc`` recompute clones share signatures, so a
+    GPT-2 training graph collapses to a few dozen unique cost evaluations.
+
+2.  **Signature-keyed memoization with explicit invalidation.**  An
+    ``EvalEngine`` is bound to one ``(HDASpec, tensor_parallel)`` pair and
+    caches
+
+    * compute cycles per signature,
+    * ``NodeCost`` per ``(signature, residency mask, internal mask)``,
+    * fused-subgraph ``NodeCost`` per subgraph signature (the tuple of node
+      triples plus link/internal byte totals),
+    * full ``ScheduleResult`` per ``(graph fingerprint, partition)``.
+
+    Because keys are *content* signatures — never node names or graph
+    identities — the caches stay valid across graph rewrites: the
+    checkpointing GA only pays for the delta each keep-mask introduces,
+    and DSE sweeps share per-graph signature tables across every
+    architecture in the grid.  Graph-side tables invalidate automatically
+    via ``WorkloadGraph._version`` (bumped on every mutation).
+
+The engine is numerically *identical* to ``CostModel`` — both call the same
+pure arithmetic kernels in ``cost_model`` (see ``tests/test_engine_parity``).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from .accelerators import CoreSpec, HDASpec
+from .cost_model import (CostModel, NodeCost, compute_cycles, node_cost_arith,
+                         subgraph_tail)
+from .graph import Node, WorkloadGraph, dtype_bytes
+
+# ---------------------------------------------------------------------------
+# signature interning
+# ---------------------------------------------------------------------------
+
+#: signature tuple -> small int id, shared process-wide.  Interning makes the
+#: per-call cache keys tiny (ints + bool masks) instead of large tuples.
+_SIG_IDS: dict[tuple, int] = {}
+_SIG_GEN = 0          # bumped when the intern table is cleared
+_SIG_LIMIT = 1 << 21  # safety valve for very long-lived processes
+
+#: (CoreSpec, tp, offchip_bw, offchip_e) -> small int id.  Node costs depend
+#: on the HDA only through this tuple, so architectures that share a core
+#: (e.g. every Edge-TPU config has the same SIMD core) share cost entries
+#: across an entire DSE sweep.
+_CORE_KEYS: dict[tuple, int] = {}
+
+#: shared cost caches, keyed by interned ids — survive across engines
+_CYC: dict[tuple, float] = {}           # (core id, sig id) -> compute cycles
+_NODE_COSTS: dict[tuple, NodeCost] = {}  # (core id, sid, rmask, imask)
+
+
+def _sig_id(sig: tuple) -> int:
+    i = _SIG_IDS.get(sig)
+    if i is None:
+        global _SIG_GEN
+        if len(_SIG_IDS) >= _SIG_LIMIT:
+            _SIG_IDS.clear()
+            _CYC.clear()          # keyed by sig ids: ids are reassigned
+            _NODE_COSTS.clear()
+            _SIG_GEN += 1         # invalidates every dependent cache
+        i = len(_SIG_IDS)
+        _SIG_IDS[sig] = i
+    return i
+
+
+def _core_key(core: CoreSpec, tp: int, hda: HDASpec) -> int:
+    k = (core, tp, hda.offchip_bw, hda.offchip_e)
+    i = _CORE_KEYS.get(k)
+    if i is None:
+        i = len(_CORE_KEYS)
+        _CORE_KEYS[k] = i
+    return i
+
+
+def tiling_factor(op_class: str, dims: dict) -> int:
+    """Outer temporal loop extent used as the intra-core tiling factor
+    (shared with the fusion solver's candidate enumeration)."""
+    if op_class == "conv":
+        return max(dims.get("OY", 1), 1)
+    if op_class == "gemm":
+        return max(dims.get("M", 1), 1)
+    return 1  # element-wise ops tile freely
+
+
+# ---------------------------------------------------------------------------
+# per-graph signature tables (SoA precomputation)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GraphSigs:
+    """Structure-of-arrays view of one graph, cached per structural version.
+
+    Updated *incrementally*: ``WorkloadGraph`` mutators record dirty node
+    names, ``copy()`` clones the tables, so a checkpointing rewrite (clone +
+    a few ``.rc`` nodes + rewired consumers) re-signs only its delta."""
+
+    version: int
+    gen: int
+    tb: dict = field(default_factory=dict)        # tensor -> bytes
+    sid: dict = field(default_factory=dict)       # node -> signature id
+    zmask: dict = field(default_factory=dict)     # node -> (sid, 0-rmask, 0-imask)
+    io_bytes: dict = field(default_factory=dict)  # node -> unique in+out bytes
+    tiling: dict = field(default_factory=dict)    # node -> tiling factor
+    node_macs: dict = field(default_factory=dict)  # node -> macs
+    fp_entry: dict = field(default_factory=dict)  # node -> fingerprint entry
+    static: int = 0                # Σ bytes of param/state/input tensors
+    static_names: set = field(default_factory=set)
+    macs_total: int = 0
+    _fp: "Fingerprint | None" = None              # lazy schedule fingerprint
+
+    def clone(self, version: int) -> "GraphSigs":
+        return GraphSigs(version, self.gen, dict(self.tb), dict(self.sid),
+                         dict(self.zmask), dict(self.io_bytes),
+                         dict(self.tiling), dict(self.node_macs),
+                         dict(self.fp_entry), self.static,
+                         set(self.static_names), self.macs_total, self._fp)
+
+
+_NO_MASK = ((), ())     # shared empty masks
+
+
+def _sign_node(graph: WorkloadGraph, s: GraphSigs, name: str) -> None:
+    nd = graph.nodes[name]
+    tensors = graph.tensors
+    tb = s.tb
+    ins, outs = nd.inputs, nd.outputs
+    for t in ins:
+        if t not in tb:
+            tb[t] = tensors[t].bytes
+    for t in outs:
+        if t not in tb:
+            tb[t] = tensors[t].bytes
+    in_bytes = tuple(tb[t] for t in ins)
+    first: dict[str, int] = {}
+    in_pat = tuple(first.setdefault(t, i) for i, t in enumerate(ins))
+    out_bytes = tuple(tb[t] for t in outs)
+    eb = dtype_bytes(tensors[outs[0]].dtype) if outs else 2
+    cls = nd.op_class
+    sig = (cls, tuple(sorted(nd.dims.items())), nd.flops,
+           in_bytes, in_pat, out_bytes, eb)
+    i = _sig_id(sig)
+    s.sid[name] = i
+    s.zmask[name] = (i, (False,) * len(ins), (False,) * len(outs))
+    s.fp_entry[name] = (name, nd.kind, i, tuple(ins), tuple(outs))
+    macs = nd.macs
+    s.macs_total += macs - s.node_macs.get(name, 0)
+    s.node_macs[name] = macs
+    seen: set = set()
+    tot = 0
+    for t in ins:
+        if t not in seen:
+            seen.add(t)
+            tot += tb[t]
+    for t in outs:
+        if t not in seen:
+            seen.add(t)
+            tot += tb[t]
+    s.io_bytes[name] = tot
+    s.tiling[name] = tiling_factor(cls, nd.dims)
+
+
+def _count_static(graph: WorkloadGraph, s: GraphSigs, names) -> None:
+    tensors = graph.tensors
+    seen = s.static_names
+    for t in names:
+        if t in seen:
+            continue
+        spec = tensors[t]
+        if spec.is_param or spec.is_state or spec.is_input:
+            s.static += spec.bytes
+            seen.add(t)
+
+
+def graph_sigs(graph: WorkloadGraph) -> GraphSigs:
+    cached = graph._derived.get("engine_sigs")
+    if cached is not None and cached.gen == _SIG_GEN:
+        if cached.version == graph._version:
+            return cached
+        # incremental: re-sign only nodes mutated since the tables were built
+        for name in graph._dirty_nodes:
+            _sign_node(graph, cached, name)
+        _count_static(graph, cached, graph._dirty_tensors)
+        cached.version = graph._version
+        cached._fp = None
+        graph._dirty_nodes = set()
+        graph._dirty_tensors = set()
+        return cached
+
+    s = GraphSigs(graph._version, _SIG_GEN)
+    for name in graph.nodes:
+        _sign_node(graph, s, name)
+    _count_static(graph, s, graph.tensors)
+    graph._dirty_nodes = set()
+    graph._dirty_tensors = set()
+    graph._derived["engine_sigs"] = s
+    return s
+
+
+class Fingerprint:
+    """Exact content fingerprint with a precomputed hash, so memo lookups
+    hash the full node-entry tuple once instead of on every dict access."""
+
+    __slots__ = ("key", "h")
+
+    def __init__(self, key: tuple):
+        self.key = key
+        self.h = hash(key)
+
+    def __hash__(self) -> int:
+        return self.h
+
+    def __eq__(self, other) -> bool:
+        return self is other or (isinstance(other, Fingerprint)
+                                 and self.h == other.h
+                                 and self.key == other.key)
+
+
+def _fingerprint(graph: WorkloadGraph, sigs: GraphSigs) -> Fingerprint:
+    """Content fingerprint determining every ``ScheduleResult`` field for a
+    fixed engine: node structure + signatures + static tensor footprint."""
+    if sigs._fp is None:
+        fe = sigs.fp_entry
+        sigs._fp = Fingerprint(
+            (tuple(fe[n] for n in graph.topo_order()), sigs.static))
+    return sigs._fp
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class EvalEngine:
+    """Cost-evaluation caches bound to one ``(HDASpec, tensor_parallel)``.
+
+    Cache invalidation rules (see docs/engine.md):
+    * graph mutation      → ``WorkloadGraph._version`` bump → signature
+      tables rebuilt on next bind; cost caches stay valid (content-keyed);
+    * different HDA       → different engine (``get_engine`` registry);
+    * intern-table clear  → generation bump → engine caches flushed.
+    """
+
+    def __init__(self, hda: HDASpec, tensor_parallel: bool = True):
+        self.hda = hda
+        self.tensor_parallel = tensor_parallel
+        self._compute = (hda.compute_cores() or list(hda.cores))[0]
+        simd = hda.simd_cores()
+        self._simd = simd[0] if simd else self._compute
+        self._gen = _SIG_GEN
+        tp = self._compute.count if tensor_parallel else 1
+        # interned (core, tp, offchip) ids: the only HDA facts node costs see
+        self._ck_compute = _core_key(self._compute, tp, hda)
+        self._ck_simd = _core_key(self._simd, 1, hda)
+        self._sg: dict[tuple, NodeCost] = {}      # subgraph signature
+        self._sched: OrderedDict = OrderedDict()  # (fingerprint, partition)
+        self._sched_cap = 256
+        self.stats = dict(node_hits=0, node_misses=0, sg_hits=0,
+                          sg_misses=0, sched_hits=0, sched_misses=0)
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _check_gen(self) -> None:
+        if self._gen != _SIG_GEN:   # intern table was cleared: ids reassigned
+            self._sg.clear()
+            self._sched.clear()
+            self._gen = _SIG_GEN
+
+    def clear(self) -> None:
+        """Explicitly drop this engine's caches (testing / memory pressure)."""
+        self._sg.clear()
+        self._sched.clear()
+
+    def core_for_class(self, op_class: str) -> CoreSpec:
+        if op_class in ("conv", "gemm"):
+            return self._compute
+        return self._simd
+
+    def ckey_for_class(self, op_class: str) -> int:
+        if op_class in ("conv", "gemm"):
+            return self._ck_compute
+        return self._ck_simd
+
+    def tp_for_class(self, op_class: str, core: CoreSpec) -> int:
+        if not self.tensor_parallel or op_class not in ("conv", "gemm"):
+            return 1
+        return core.count
+
+    def bind(self, graph: WorkloadGraph) -> "BoundEngine":
+        self._check_gen()
+        return BoundEngine(self, graph, graph_sigs(graph))
+
+    # -- schedule memo ------------------------------------------------------
+
+    def sched_get(self, key: tuple):
+        hit = self._sched.get(key)
+        if hit is not None:
+            self._sched.move_to_end(key)
+            self.stats["sched_hits"] += 1
+        else:
+            self.stats["sched_misses"] += 1
+        return hit
+
+    def sched_put(self, key: tuple, result) -> None:
+        self._sched[key] = result
+        if len(self._sched) > self._sched_cap:
+            self._sched.popitem(last=False)
+
+
+class BoundEngine:
+    """An :class:`EvalEngine` bound to one graph's signature tables."""
+
+    def __init__(self, engine: EvalEngine, graph: WorkloadGraph,
+                 sigs: GraphSigs):
+        self.engine = engine
+        self.graph = graph
+        self.sigs = sigs
+
+    def fingerprint(self) -> tuple:
+        return _fingerprint(self.graph, self.sigs)
+
+    # -- node cost ----------------------------------------------------------
+
+    def _cycles(self, ckey: int, sid: int, nd: Node) -> float:
+        eng = self.engine
+        k = (ckey, sid)
+        cyc = _CYC.get(k)
+        if cyc is None:
+            core = eng.core_for_class(nd.op_class)
+            cyc = compute_cycles(nd, core, eng.tp_for_class(nd.op_class, core))
+            _CYC[k] = cyc
+        return cyc
+
+    def node_cost(self, nd: Node, sid: int, rmask: tuple,
+                  imask: tuple) -> NodeCost:
+        eng = self.engine
+        ckey = eng.ckey_for_class(nd.op_class)
+        key = (ckey, sid, rmask, imask)
+        c = _NODE_COSTS.get(key)
+        if c is not None:
+            eng.stats["node_hits"] += 1
+            return c
+        eng.stats["node_misses"] += 1
+        tb = self.sigs.tb
+        core = eng.core_for_class(nd.op_class)
+        cyc = self._cycles(ckey, sid, nd)
+        seen: set = set()
+        inb = 0
+        for i, t in enumerate(nd.inputs):
+            if rmask[i] or t in seen:
+                continue
+            seen.add(t)
+            inb += tb[t]
+        outb = 0
+        for i, t in enumerate(nd.outputs):
+            if not imask[i]:
+                outb += tb[t]
+        stationary = streamed = None
+        if nd.op_class in ("conv", "gemm") and len(nd.inputs) >= 2:
+            if core.dataflow == "ws":
+                stationary = tb[nd.inputs[1]]             # weights
+                streamed = inb - (stationary if not rmask[1] else 0)
+            else:                                         # output-stationary
+                stationary = sum(tb[t] for t in nd.outputs)
+                streamed = inb
+        eb = dtype_bytes(self.graph.tensors[nd.outputs[0]].dtype) \
+            if nd.outputs else 2
+        c = node_cost_arith(cyc, inb, outb, stationary, streamed or 0,
+                            nd.macs, eb, core, eng.hda)
+        _NODE_COSTS[key] = c
+        return c
+
+    # -- fused subgraph cost ------------------------------------------------
+
+    def subgraph_cost(self, sg) -> NodeCost:
+        """Numerically identical to ``CostModel.subgraph_cost`` but memoized
+        on the subgraph's content signature."""
+        eng = self.engine
+        g = self.graph
+        nodes = g.nodes
+        sid_of = self.sigs.sid
+        tb = self.sigs.tb
+        consumers = g.consumers
+
+        if len(sg) == 1:
+            # fast path: a singleton has no internal tensors (a node cannot
+            # consume its own output in a DAG), no residency and no link
+            nd = nodes[sg[0]]
+            tri = self.sigs.zmask[nd.name]
+            key = ((tri,), 0.0, 0)
+            cached = eng._sg.get(key)
+            if cached is not None:
+                eng.stats["sg_hits"] += 1
+                return cached
+            eng.stats["sg_misses"] += 1
+            c = self.node_cost(nd, *tri)
+            cname = eng.core_for_class(nd.op_class).name
+            res = subgraph_tail({cname: self._cycles(
+                eng.ckey_for_class(nd.op_class), tri[0], nd)},
+                c.offchip_bytes, c.local_bytes, 0.0, c.energy_pj, 0,
+                eng._compute, eng._simd, eng.hda)
+            eng._sg[key] = res
+            return res
+
+        node_objs = [nodes[n] for n in sg]
+
+        nodeset = set(sg)
+        internal: set = set()
+        for nd in node_objs:
+            for t in nd.outputs:
+                cs = consumers.get(t)
+                if cs and all(c in nodeset for c in cs):
+                    internal.add(t)
+
+        triples = []
+        resident: set = set()
+        for nd in node_objs:
+            rmask = tuple((t in resident or t in internal) for t in nd.inputs)
+            imask = tuple((t in internal) for t in nd.outputs)
+            triples.append((sid_of[nd.name], rmask, imask))
+            resident.update(nd.outputs)
+
+        link = 0.0
+        for t in internal:
+            pc = eng.core_for_class(nodes[g.producer[t]].op_class).name
+            for c in consumers.get(t, []):
+                if eng.core_for_class(nodes[c].op_class).name != pc:
+                    link += tb[t]
+        internal_bytes = sum(tb[t] for t in internal)
+
+        key = (tuple(triples), link, internal_bytes)
+        cached = eng._sg.get(key)
+        if cached is not None:
+            eng.stats["sg_hits"] += 1
+            return cached
+        eng.stats["sg_misses"] += 1
+
+        per_core: dict[str, float] = {}
+        offchip = local = energy = 0.0
+        for nd, tri in zip(node_objs, triples):
+            c = self.node_cost(nd, *tri)
+            cls = nd.op_class
+            cname = eng.core_for_class(cls).name
+            cyc = self._cycles(eng.ckey_for_class(cls), tri[0], nd)
+            per_core[cname] = per_core.get(cname, 0.0) + cyc
+            offchip += c.offchip_bytes
+            local += c.local_bytes
+            energy += c.energy_pj
+        res = subgraph_tail(per_core, offchip, local, link, energy,
+                            internal_bytes, eng._compute, eng._simd, eng.hda)
+        eng._sg[key] = res
+        return res
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+_ENGINES: OrderedDict = OrderedDict()
+_ENGINE_CAP = 512      # DSE sweeps create one engine per architecture
+
+
+def get_engine(hda: HDASpec, tensor_parallel: bool = True) -> EvalEngine:
+    """Process-wide engine registry keyed by ``(HDASpec, tensor_parallel)``
+    (HDASpec is a frozen dataclass, so value-identical specs share an
+    engine).  Bounded LRU so unbounded sweeps cannot leak memory."""
+    key = (hda, tensor_parallel)
+    e = _ENGINES.get(key)
+    if e is None:
+        while len(_ENGINES) >= _ENGINE_CAP:
+            _ENGINES.popitem(last=False)
+        e = _ENGINES[key] = EvalEngine(hda, tensor_parallel)
+    else:
+        _ENGINES.move_to_end(key)
+    return e
+
+
+def clear_engines() -> None:
+    """Drop every registered engine (testing / benchmarking cold paths)."""
+    _ENGINES.clear()

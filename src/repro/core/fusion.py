@@ -26,6 +26,7 @@ import time
 from dataclasses import dataclass
 
 from .accelerators import HDASpec
+from .engine import graph_sigs
 from .graph import WorkloadGraph
 
 
@@ -71,26 +72,6 @@ class _Idx:
         return self.g.nodes[self.order[i]]
 
 
-def _tiling_factor(node) -> int:
-    """Outer temporal loop extent used as the intra-core tiling factor."""
-    d = node.dims
-    if node.op_class == "conv":
-        return max(d.get("OY", 1), 1)
-    if node.op_class == "gemm":
-        return max(d.get("M", 1), 1)
-    return 1  # element-wise ops tile freely
-
-
-def _node_bytes(g: WorkloadGraph, name: str) -> int:
-    nd = g.nodes[name]
-    seen, tot = set(), 0
-    for t in list(nd.inputs) + list(nd.outputs):
-        if t not in seen:
-            seen.add(t)
-            tot += g.tensors[t].bytes
-    return tot
-
-
 # ---------------------------------------------------------------------------
 # candidate enumeration
 # ---------------------------------------------------------------------------
@@ -104,8 +85,11 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
     comp = (hda.compute_cores() or list(hda.cores))[0]
     cap = comp.local.size * comp.count
 
-    tiling = [_tiling_factor(ix.node(i)) for i in range(n)]
-    nbytes = [_node_bytes(g, ix.order[i]) for i in range(n)]
+    # reuse the evaluation engine's per-graph SoA tables (tiling factors and
+    # unique per-node I/O bytes) instead of recomputing them here
+    sigs = graph_sigs(g)
+    tiling = [sigs.tiling[ix.order[i]] for i in range(n)]
+    nbytes = [sigs.io_bytes[ix.order[i]] for i in range(n)]
 
     def compat(ts: list[int], t: int) -> bool:
         return all(a % t == 0 or t % a == 0 for a in ts if a > 1) or t == 1
@@ -253,26 +237,96 @@ def solve_cover(n_nodes: int, cands: list[tuple], idx_of: dict,
     return [cands[si] for si in best]
 
 
-def repair_partition(g: WorkloadGraph, partition: list) -> list:
+def tarjan_sccs(n: int, succ: list) -> list:
+    """Iterative Tarjan strongly-connected components over an integer graph
+    (``succ[i]`` iterable of successor indices).  Stdlib-only — this sits on
+    the GA hot path, so no networkx import (kept solely as an optional
+    cross-check in the tests)."""
+    index = [-1] * n
+    low = [0] * n
+    on_stack = [False] * n
+    stack: list[int] = []
+    sccs: list[list[int]] = []
+    counter = 0
+    for root in range(n):
+        if index[root] != -1:
+            continue
+        work = [(root, iter(succ[root]))]
+        index[root] = low[root] = counter
+        counter += 1
+        stack.append(root)
+        on_stack[root] = True
+        while work:
+            v, it = work[-1]
+            advanced = False
+            for w in it:
+                if index[w] == -1:
+                    index[w] = low[w] = counter
+                    counter += 1
+                    stack.append(w)
+                    on_stack[w] = True
+                    work.append((w, iter(succ[w])))
+                    advanced = True
+                    break
+                if on_stack[w]:
+                    low[v] = min(low[v], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                low[work[-1][0]] = min(low[work[-1][0]], low[v])
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack[w] = False
+                    comp.append(w)
+                    if w == v:
+                        break
+                sccs.append(comp)
+    return sccs
+
+
+def repair_partition(g: WorkloadGraph, partition: list,
+                     return_quotient: bool = False):
     """Individually-convex subgraphs can still form *mutual* cycles in the
     quotient (A→B and B→A through disjoint diamonds).  Break any strongly
     connected quotient component by splitting its largest part into
-    singletons until the quotient is a DAG."""
-    import networkx as nx
+    singletons until the quotient is a DAG.
 
+    With ``return_quotient=True`` also returns the final (acyclic) quotient
+    successor sets, so ``schedule(..., quotient=...)`` need not rebuild them.
+    """
     partition = [tuple(sg) for sg in partition]
+    _, succs = g.adjacency()
     while True:
         sg_of = {n: i for i, sg in enumerate(partition) for n in sg}
-        qg = nx.DiGraph()
-        qg.add_nodes_from(range(len(partition)))
+        qsucc: list = [set() for _ in partition]
         for n in g.nodes:
-            for s in g.successors(n):
-                a, b = sg_of[n], sg_of[s]
+            a = sg_of[n]
+            for s in succs[n]:
+                b = sg_of[s]
                 if a != b:
-                    qg.add_edge(a, b)
-        sccs = [c for c in nx.strongly_connected_components(qg) if len(c) > 1]
-        if not sccs:
-            return partition
+                    qsucc[a].add(b)
+        # cheap Kahn pass first: quotients are almost always already acyclic,
+        # so only run the full SCC decomposition when a cycle actually exists
+        nq = len(partition)
+        indeg = [0] * nq
+        for bs in qsucc:
+            for b in bs:
+                indeg[b] += 1
+        stack = [i for i in range(nq) if indeg[i] == 0]
+        seen = 0
+        while stack:
+            x = stack.pop()
+            seen += 1
+            for y in qsucc[x]:
+                indeg[y] -= 1
+                if indeg[y] == 0:
+                    stack.append(y)
+        if seen == nq:
+            return (partition, qsucc) if return_quotient else partition
+        sccs = [c for c in tarjan_sccs(nq, qsucc) if len(c) > 1]
         worst = max(sccs, key=len)
         victim = max(worst, key=lambda i: len(partition[i]))
         new = [sg for i, sg in enumerate(partition) if i != victim]
@@ -307,6 +361,7 @@ def manual_fusion(g: WorkloadGraph) -> list[tuple]:
     chain of element-wise ops (norm → act → add), mimicking the paper's
     manually designed Stream configuration."""
     order = g.topo_order()
+    preds_of, succs_of = g.adjacency()
     taken: set[str] = set()
     part: list[tuple] = []
     for n in order:
@@ -318,7 +373,7 @@ def manual_fusion(g: WorkloadGraph) -> list[tuple]:
         if nd.op_class in ("conv", "gemm"):
             cur = n
             while True:
-                succs = [s for s in g.successors(cur) if s not in taken]
+                succs = [s for s in succs_of[cur] if s not in taken]
                 if len(succs) != 1:
                     break
                 s = succs[0]
@@ -326,10 +381,10 @@ def manual_fusion(g: WorkloadGraph) -> list[tuple]:
                 if snd.op_class not in ("simd",) or \
                         any(p not in taken and p != cur and
                             g.nodes[p].kind not in () for p in
-                            g.predecessors(s) if p not in taken):
+                            preds_of[s] if p not in taken):
                     break
                 # only absorb if all preds already placed (convexity-safe)
-                if not all(p in taken or p == cur for p in g.predecessors(s)):
+                if not all(p in taken or p == cur for p in preds_of[s]):
                     break
                 grp.append(s)
                 taken.add(s)

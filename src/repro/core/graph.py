@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
+from functools import cached_property
 from typing import Iterable, Iterator
 
 import numpy as np
@@ -52,11 +53,11 @@ class TensorSpec:
     is_state: bool = False          # optimizer state
     is_input: bool = False          # graph input (data)
 
-    @property
+    @cached_property
     def size(self) -> int:
-        return int(np.prod(self.shape)) if self.shape else 1
+        return math.prod(self.shape) if self.shape else 1
 
-    @property
+    @cached_property
     def bytes(self) -> int:
         return self.size * dtype_bytes(self.dtype)
 
@@ -117,11 +118,11 @@ class Node:
     source: str | None = None   # fwd node this bwd/recompute node derives from
     meta: dict = field(default_factory=dict)
 
-    @property
+    @cached_property
     def op_class(self) -> str:
         return OP_CLASS.get(self.op, "simd")
 
-    @property
+    @cached_property
     def macs(self) -> int:
         return self.flops // 2
 
@@ -152,6 +153,26 @@ class WorkloadGraph:
         self.tensors: dict[str, TensorSpec] = {}
         self.producer: dict[str, str] = {}          # tensor -> node
         self.consumers: dict[str, list[str]] = {}   # tensor -> [node]
+        # structural version: bumped on every mutation; derived caches
+        # (adjacency, topo order, engine signatures) key off it.
+        self._version = 0
+        self._adj: tuple | None = None      # (version, preds, succs)
+        self._adj_dirty: set = set()        # nodes whose adjacency is stale
+        self._topo: tuple | None = None     # (version, order)
+        self._derived: dict = {}            # tag -> payload (version-aware)
+        self._dirty_nodes: set = set()      # nodes touched since last sig build
+        self._dirty_tensors: set = set()    # tensors added since last sig build
+        self._shared_cons: set = set()      # consumer lists shared with a copy
+
+    def _own_consumers(self, t: str) -> list:
+        """Copy-on-write access to ``consumers[t]`` for mutation.  ``copy()``
+        shares the per-tensor lists between source and clone; the first
+        mutation on either side splits that tensor's list."""
+        cs = self.consumers.setdefault(t, [])
+        if t in self._shared_cons:
+            cs = self.consumers[t] = list(cs)
+            self._shared_cons.discard(t)
+        return cs
 
     # -- construction -------------------------------------------------------
 
@@ -161,6 +182,8 @@ class WorkloadGraph:
             raise GraphError(f"tensor {spec.name!r} redefined with different spec")
         self.tensors[spec.name] = spec
         self.consumers.setdefault(spec.name, [])
+        self._version += 1
+        self._dirty_tensors.add(spec.name)
         return spec
 
     def tensor(self, name: str, shape: tuple[int, ...], dtype: str = "bfloat16",
@@ -181,36 +204,84 @@ class WorkloadGraph:
                 raise GraphError(f"tensor {t!r} produced twice "
                                  f"({self.producer[t]} and {node.name})")
             self.producer[t] = node.name
+        if self._adj is not None:
+            # incremental adjacency: the new node, producers of its inputs
+            # (gain a successor) and pre-registered consumers of its outputs
+            # (gain a predecessor) need their entries recomputed
+            dirty = self._adj_dirty
+            dirty.add(node.name)
+            for t in node.inputs:
+                p = self.producer.get(t)
+                if p is not None:
+                    dirty.add(p)
+            for t in node.outputs:
+                for c in self.consumers.get(t, ()):
+                    dirty.add(c)
         for t in node.inputs:
-            self.consumers.setdefault(t, []).append(node.name)
+            self._own_consumers(t).append(node.name)
         self.nodes[node.name] = node
+        self._version += 1
+        self._dirty_nodes.add(node.name)
         return node
 
     # -- structure ----------------------------------------------------------
 
-    def predecessors(self, node: str) -> list[str]:
-        seen, out = set(), []
-        for t in self.nodes[node].inputs:
+    def _node_adj(self, name: str) -> tuple[list, list]:
+        nd = self.nodes[name]
+        seen: set = set()
+        ps: list[str] = []
+        for t in nd.inputs:
             p = self.producer.get(t)
             if p is not None and p not in seen:
                 seen.add(p)
-                out.append(p)
-        return out
-
-    def successors(self, node: str) -> list[str]:
-        seen, out = set(), []
-        for t in self.nodes[node].outputs:
+                ps.append(p)
+        seen = set()
+        ss: list[str] = []
+        for t in nd.outputs:
             for c in self.consumers.get(t, []):
                 if c not in seen:
                     seen.add(c)
-                    out.append(c)
-        return out
+                    ss.append(c)
+        return ps, ss
+
+    def adjacency(self) -> tuple[dict, dict]:
+        """(preds, succs) node-name adjacency maps, cached per version and
+        patched incrementally for mutated nodes.  The returned maps and lists
+        are shared — callers must not mutate them (entries are *replaced*,
+        never mutated, on graph edits)."""
+        adj = self._adj
+        if adj is not None:
+            if adj[0] == self._version:
+                return adj[1], adj[2]
+            # patch only the entries invalidated by mutations
+            preds, succs = adj[1], adj[2]
+            for name in self._adj_dirty:
+                preds[name], succs[name] = self._node_adj(name)
+            self._adj_dirty = set()
+            self._adj = (self._version, preds, succs)
+            return preds, succs
+        preds = {}
+        succs = {}
+        for name in self.nodes:
+            preds[name], succs[name] = self._node_adj(name)
+        self._adj_dirty = set()
+        self._adj = (self._version, preds, succs)
+        return preds, succs
+
+    def predecessors(self, node: str) -> list[str]:
+        return self.adjacency()[0][node]
+
+    def successors(self, node: str) -> list[str]:
+        return self.adjacency()[1][node]
 
     def topo_order(self) -> list[str]:
-        indeg = {n: 0 for n in self.nodes}
-        for n in self.nodes:
-            for p in self.predecessors(n):
-                indeg[n] += 1
+        """Topological node order, cached per structural version.  The
+        returned list is shared (and carried over by ``copy()``) — callers
+        must not mutate it."""
+        if self._topo is not None and self._topo[0] == self._version:
+            return self._topo[1]
+        preds, succs = self.adjacency()
+        indeg = {n: len(ps) for n, ps in preds.items()}
         ready = sorted(n for n, d in indeg.items() if d == 0)
         out: list[str] = []
         from collections import deque
@@ -218,13 +289,14 @@ class WorkloadGraph:
         while q:
             n = q.popleft()
             out.append(n)
-            for s in self.successors(n):
+            for s in succs[n]:
                 indeg[s] -= 1
                 if indeg[s] == 0:
                     q.append(s)
         if len(out) != len(self.nodes):
             cyc = set(self.nodes) - set(out)
             raise GraphError(f"graph has a cycle involving {sorted(cyc)[:5]}")
+        self._topo = (self._version, out)
         return out
 
     def validate(self) -> None:
@@ -273,13 +345,35 @@ class WorkloadGraph:
     def copy(self) -> "WorkloadGraph":
         g = WorkloadGraph(self.name)
         g.tensors = dict(self.tensors)
-        for n in self.topo_order():
-            nd = self.nodes[n]
-            g.nodes[n] = Node(nd.name, nd.op, nd.kind, dict(nd.dims),
-                              list(nd.inputs), list(nd.outputs), nd.flops,
-                              nd.source, dict(nd.meta))
+        nodes = g.nodes
+        for nd in self.nodes.values():
+            # fast clone: bulk __dict__ copy (carries cached op_class/macs),
+            # then fresh instances of the mutable fields only
+            n2 = Node.__new__(Node)
+            n2.__dict__.update(nd.__dict__)
+            n2.dims = dict(nd.dims)
+            n2.inputs = list(nd.inputs)
+            n2.outputs = list(nd.outputs)
+            n2.meta = dict(nd.meta)
+            nodes[nd.name] = n2
         g.producer = dict(self.producer)
-        g.consumers = {t: list(cs) for t, cs in self.consumers.items()}
+        # consumer lists are shared copy-on-write: either side's first
+        # mutation of a tensor's list splits it (see _own_consumers)
+        g.consumers = dict(self.consumers)
+        shared = set(self.consumers)
+        g._shared_cons = shared
+        self._shared_cons |= shared
+        g._version = 1
+        # carry over fresh derived/structural caches: clones start
+        # clean-dirty, so later edits on the copy only pay their delta
+        if self._adj is not None and self._adj[0] == self._version:
+            g._adj = (1, dict(self._adj[1]), dict(self._adj[2]))
+        if self._topo is not None and self._topo[0] == self._version:
+            g._topo = (1, self._topo[1])
+        for tag, payload in self._derived.items():
+            if getattr(payload, "version", None) == self._version and \
+                    hasattr(payload, "clone"):
+                g._derived[tag] = payload.clone(g._version)
         return g
 
     def rename_tensor_for(self, node: str, old: str, new: str) -> None:
@@ -288,8 +382,16 @@ class WorkloadGraph:
         if old not in nd.inputs:
             raise GraphError(f"{node} does not read {old}")
         nd.inputs = [new if t == old else t for t in nd.inputs]
-        self.consumers[old].remove(node)
-        self.consumers.setdefault(new, []).append(node)
+        self._own_consumers(old).remove(node)
+        self._own_consumers(new).append(node)
+        self._version += 1
+        self._dirty_nodes.add(node)
+        if self._adj is not None:
+            self._adj_dirty.add(node)
+            for t in (old, new):
+                p = self.producer.get(t)
+                if p is not None:
+                    self._adj_dirty.add(p)
 
     # -- misc ---------------------------------------------------------------
 

@@ -13,31 +13,25 @@ import numpy as np
 
 
 def fast_non_dominated_sort(F: np.ndarray) -> list[np.ndarray]:
-    """F: (n, m) objective matrix (minimize).  Returns fronts as index arrays."""
+    """F: (n, m) objective matrix (minimize).  Returns fronts as index arrays.
+
+    One vectorized pairwise domination matrix feeds both the dominated-by
+    relation and the domination counts (the former per-row scan computed the
+    same relation twice), and front peeling is pure array arithmetic."""
     n = F.shape[0]
-    dominated_by: list[list[int]] = [[] for _ in range(n)]
-    dom_count = np.zeros(n, dtype=int)
-    for i in range(n):
-        # i dominates j  <=>  all(F_i <= F_j) and any(F_i < F_j)
-        le = np.all(F[i] <= F, axis=1)
-        lt = np.any(F[i] < F, axis=1)
-        dominates = le & lt
-        dominates[i] = False
-        for j in np.nonzero(dominates)[0]:
-            dominated_by[i].append(int(j))
-        dom_count[i] = int(np.sum(np.all(F <= F[i], axis=1) &
-                                  np.any(F < F[i], axis=1)))
+    # dom[i, j]  <=>  i dominates j: all(F_i <= F_j) and any(F_i < F_j)
+    le = np.all(F[:, None, :] <= F[None, :, :], axis=2)
+    lt = np.any(F[:, None, :] < F[None, :, :], axis=2)
+    dom = le & lt
+    np.fill_diagonal(dom, False)
+    dom_count = dom.sum(axis=0)
     fronts: list[np.ndarray] = []
     current = np.nonzero(dom_count == 0)[0]
     while current.size:
         fronts.append(current)
-        nxt = []
-        for i in current:
-            for j in dominated_by[i]:
-                dom_count[j] -= 1
-                if dom_count[j] == 0:
-                    nxt.append(j)
-        current = np.array(sorted(set(nxt)), dtype=int)
+        dom_count = dom_count - dom[current].sum(axis=0)
+        dom_count[current] = -1          # processed: never reaches zero again
+        current = np.nonzero(dom_count == 0)[0]
     return fronts
 
 

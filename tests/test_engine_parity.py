@@ -1,0 +1,167 @@
+"""Engine-vs-reference parity: the signature-memoizing evaluation engine
+must produce *bit-for-bit identical* ``ScheduleResult``s to the direct
+``CostModel`` path on every workload class (ISSUE 2 correctness bar).
+
+``schedule(..., use_engine=False)`` is the seed implementation retained as
+the reference; the default path goes through ``repro.core.engine``.
+"""
+
+import pytest
+
+from repro.core import (apply_checkpointing, activation_set,
+                        build_training_graph, edge_tpu, fusemax, get_engine,
+                        gpt2_graph, layer_by_layer, manual_fusion,
+                        resnet18_graph, schedule)
+from repro.core.engine import EvalEngine, graph_sigs
+from repro.core.fusion import repair_partition, tarjan_sccs
+
+
+def assert_equal_results(a, b):
+    assert a.latency == b.latency
+    assert a.energy == b.energy
+    assert a.offchip_bytes == b.offchip_bytes
+    assert a.peak_mem == b.peak_mem
+    assert a.activation_bytes == b.activation_bytes
+    assert a.per_core_busy == b.per_core_busy
+    assert a.n_subgraphs == b.n_subgraphs
+    assert a.total_macs == b.total_macs
+    assert a.hda_name == b.hda_name
+
+
+@pytest.fixture(scope="module")
+def workloads():
+    rn = resnet18_graph(1, 32)
+    rn_tg = build_training_graph(rn, "adam")
+    gpt = gpt2_graph(1, 64, 64, 2, 2, 256)
+    gpt_tg = build_training_graph(gpt, "adam")
+    return dict(rn=rn, rn_tg=rn_tg, gpt=gpt, gpt_tg=gpt_tg)
+
+
+@pytest.mark.parametrize("wname,hname", [
+    ("rn", "edge_tpu"), ("rn_tg", "edge_tpu"),
+    ("gpt", "fusemax"), ("gpt_tg", "fusemax"),
+])
+@pytest.mark.parametrize("fusion", ["layer", "manual"])
+def test_schedule_parity(workloads, wname, hname, fusion):
+    w = workloads[wname]
+    g = w.graph if hasattr(w, "graph") else w
+    hda = edge_tpu() if hname == "edge_tpu" else fusemax()
+    part = layer_by_layer(g) if fusion == "layer" \
+        else repair_partition(g, manual_fusion(g))
+    eng = schedule(g, hda, part)
+    ref = schedule(g, hda, part, use_engine=False)
+    assert_equal_results(eng, ref)
+
+
+@pytest.mark.parametrize("wname,hname", [("rn_tg", "edge_tpu"),
+                                         ("gpt_tg", "fusemax")])
+@pytest.mark.parametrize("stride", [2, 3, 0])
+def test_checkpointed_parity(workloads, wname, hname, stride):
+    """Checkpointed variants: rewritten graphs (``.rc`` clones + rewired
+    consumers) exercise the incremental signature path."""
+    tg = workloads[wname]
+    hda = edge_tpu() if hname == "edge_tpu" else fusemax()
+    acts = activation_set(tg)
+    keep = set(acts[::stride]) if stride else set()
+    g2 = apply_checkpointing(tg, keep)
+    part, quotient = repair_partition(g2, manual_fusion(g2),
+                                      return_quotient=True)
+    eng = schedule(g2, hda, part, quotient=quotient)
+    ref = schedule(g2, hda, part, use_engine=False)
+    assert_equal_results(eng, ref)
+
+
+def test_schedule_memo_returns_identical(workloads):
+    """Repeated evaluation of the same (graph, partition, hda) hits the
+    ScheduleResult memo and returns equal results."""
+    g = workloads["rn"]
+    hda = edge_tpu()
+    eng = EvalEngine(hda)
+    a = schedule(g, hda, engine=eng)
+    hits_before = eng.stats["sched_hits"]
+    b = schedule(g, hda, engine=eng)
+    assert eng.stats["sched_hits"] == hits_before + 1
+    assert_equal_results(a, b)
+    # the memo must hand out an independent per_core_busy mapping
+    b.per_core_busy["poison"] = 1.0
+    c = schedule(g, hda, engine=eng)
+    assert "poison" not in c.per_core_busy
+
+
+def test_cache_invalidation_on_mutation(workloads):
+    """Mutating a graph must invalidate the signature tables (explicit
+    invalidation via the structural version counter)."""
+    from repro.core import Node, TensorSpec
+
+    g = workloads["rn"].copy() if hasattr(workloads["rn"], "copy") else None
+    g = workloads["rn"].copy()
+    hda = edge_tpu()
+    before = schedule(g, hda)
+    sigs_before = graph_sigs(g)
+    # splice an extra consumer node onto the first tensor
+    first = next(iter(g.tensors))
+    g.add_tensor(TensorSpec("parity_extra", (64, 64), "bfloat16"))
+    g.add_node(Node("parity_extra_node", "elementwise", "fwd",
+                    {"N": 64 * 64}, [first], ["parity_extra"],
+                    2 * 64 * 64))
+    after = schedule(g, hda)
+    ref = schedule(g, hda, use_engine=False)
+    assert_equal_results(after, ref)
+    assert after.latency >= before.latency
+    assert graph_sigs(g) is sigs_before          # updated in place...
+    assert "parity_extra_node" in sigs_before.sid  # ...with the new node
+
+
+def test_ga_engine_shares_costs(workloads):
+    """Two checkpointing rewrites of the same training graph share node-cost
+    cache entries through one engine (the GA's delta-only property)."""
+    tg = workloads["rn_tg"]
+    hda = edge_tpu()
+    eng = EvalEngine(hda)
+    acts = activation_set(tg)
+    misses = []
+    for keep in (set(acts[::2]), set(acts[::4])):
+        before = eng.stats["sg_misses"]
+        g2 = apply_checkpointing(tg, keep)
+        schedule(g2, hda, repair_partition(g2, manual_fusion(g2)),
+                 engine=eng)
+        misses.append(eng.stats["sg_misses"] - before)
+    # the second keep-set re-uses most fused-subgraph cost entries: it only
+    # pays for the delta its own rewrite introduces
+    assert misses[1] < misses[0] / 2
+    assert eng.stats["sg_hits"] > 0
+
+
+def test_tarjan_matches_networkx_crosscheck():
+    """Optional cross-check of the stdlib Tarjan SCC against networkx
+    (networkx is no longer on any hot path)."""
+    nx = pytest.importorskip("networkx")
+    import random
+
+    rng = random.Random(7)
+    n = 60
+    succ = [set() for _ in range(n)]
+    for _ in range(150):
+        a, b = rng.randrange(n), rng.randrange(n)
+        if a != b:
+            succ[a].add(b)
+    mine = {frozenset(c) for c in tarjan_sccs(n, succ)}
+    g = nx.DiGraph()
+    g.add_nodes_from(range(n))
+    g.add_edges_from((a, b) for a in range(n) for b in succ[a])
+    theirs = {frozenset(c) for c in nx.strongly_connected_components(g)}
+    assert mine == theirs
+
+
+def test_repair_partition_quotient_consistency(workloads):
+    """The quotient handed back by repair_partition equals a fresh
+    quotient_dag computation."""
+    from repro.core import quotient_dag
+
+    tg = workloads["rn_tg"]
+    g = tg.graph
+    part, quotient = repair_partition(g, manual_fusion(g),
+                                      return_quotient=True)
+    _, succ = quotient_dag(g, part)
+    for i in range(len(part)):
+        assert set(quotient[i]) == set(succ.get(i, ()))
