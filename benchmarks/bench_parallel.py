@@ -1,0 +1,74 @@
+"""Multi-accelerator parallel-training sweep (edge → data center): strategy
+× chip-count scaling for ResNet-18 and GPT-2 training graphs, plus the
+engine-cache warm-path microbenchmark for parallel rewrites.
+"""
+
+from __future__ import annotations
+
+from repro.core import (build_training_graph, clear_engines,
+                        datacenter_cluster, edge_cluster, evaluate_parallel,
+                        get_engine, gpt2_graph, resnet18_graph,
+                        strategy_space, sweep_parallel)
+
+from .common import dump, emit, timed
+
+
+def _workloads(fast: bool):
+    return {
+        "resnet18": build_training_graph(resnet18_graph(2, 32), "adam"),
+        "gpt2": build_training_graph(
+            gpt2_graph(1, 64 if fast else 128, 192, 2 if fast else 4,
+                       4, 1024), "adam"),
+    }
+
+
+def run(fast: bool = True):
+    chips = [2, 4] if fast else [2, 4, 8]
+    workloads = _workloads(fast)
+
+    rows = []
+    n_evals = 0
+    total_us = 0.0
+    for cname, make in (("edge", edge_cluster),
+                        ("datacenter", datacenter_cluster)):
+        points, us = timed(sweep_parallel, workloads, make, chips)
+        total_us += us
+        n_evals += len(points) * len(workloads)
+        rows.extend(dict(cluster=cname, **p.row()) for p in points)
+    dump("parallel_scaling_bench", rows)
+
+    # headline: data-parallel scaling efficiency at the largest chip count
+    n = chips[-1]
+    dp1 = [r for r in rows if r["cluster"] == "datacenter"
+           and r["strategy"] == f"dp{chips[0]}"]
+    dpn = [r for r in rows if r["cluster"] == "datacenter"
+           and r["strategy"] == f"dp{n}"]
+    eff = 0.0
+    if dp1 and dpn:
+        eff = (dpn[0]["resnet18_throughput"] /
+               (dp1[0]["resnet18_throughput"] * n / chips[0]))
+    derived = (f"chip_counts={chips};strategies/chips="
+               f"{len(strategy_space(n))};dp_scaling_eff_{chips[0]}to{n}="
+               f"{eff:.2f}")
+    emit("parallel_scaling", total_us / max(n_evals, 1), derived)
+
+    # warm-path: re-evaluating one strategy with a shared engine must hit the
+    # ScheduleResult memo (the DSE/GA hot loop for parallel configs)
+    cluster = datacenter_cluster(chips[0])
+    eng = get_engine(cluster.chip)
+    tg = workloads["resnet18"]
+    strat = strategy_space(chips[0])[0]
+    evaluate_parallel(tg, cluster, strat, engine=eng)       # warm the caches
+    _, us_warm = timed(evaluate_parallel, tg, cluster, strat, engine=eng)
+    emit("parallel_eval_warm", us_warm,
+         f"sched_hits={eng.stats['sched_hits']};strategy={strat.label}")
+    return dict(points=len(rows))
+
+
+def main():
+    clear_engines()
+    run(fast=False)
+
+
+if __name__ == "__main__":
+    main()

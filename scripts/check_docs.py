@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Documentation health check (wired into scripts/ci.sh).
+
+* every relative markdown link in README.md and docs/*.md resolves to an
+  existing file (http(s) links and pure #anchors are skipped);
+* every file referenced with backticks as ``docs/x.md`` / ``examples/x.py``
+  / ``scripts/x`` in README.md exists;
+* every ``examples/*.py`` actually imports (top-level imports execute, so a
+  renamed/removed library export fails CI; the example bodies stay behind
+  ``if __name__ == "__main__"`` guards and do not run).
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`((?:docs|examples|scripts|src|tests|benchmarks|"
+                     r"artifacts)/[A-Za-z0-9_./-]+)`")
+
+
+def check_markdown(md: Path, errors: list) -> None:
+    text = md.read_text()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    for ref in TICK_RE.findall(text):
+        if any(ch in ref for ch in "*<>{}"):
+            continue                      # glob/placeholder, not a path
+        if not (ROOT / ref).exists():
+            errors.append(f"{md.relative_to(ROOT)}: missing file ref "
+                          f"-> {ref}")
+
+
+def check_examples(errors: list) -> None:
+    sys.path.insert(0, str(ROOT / "src"))
+    sys.dont_write_bytecode = True           # no examples/__pycache__/
+    for ex in sorted((ROOT / "examples").glob("*.py")):
+        name = f"_docs_check_{ex.stem}"
+        try:
+            spec = importlib.util.spec_from_file_location(name, ex)
+            mod = importlib.util.module_from_spec(spec)
+            sys.modules[name] = mod
+            spec.loader.exec_module(mod)     # runs imports, not main()
+        except Exception as e:  # noqa: BLE001 — any import failure is a finding
+            errors.append(f"examples/{ex.name}: import failed: "
+                          f"{type(e).__name__}: {e}")
+        finally:
+            sys.modules.pop(name, None)
+
+
+def main() -> int:
+    errors: list = []
+    docs = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    for md in docs:
+        if md.exists():
+            check_markdown(md, errors)
+        else:
+            errors.append(f"missing documentation file: {md}")
+    check_examples(errors)
+    if errors:
+        print("docs check FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_md = len(docs)
+    n_ex = len(list((ROOT / "examples").glob("*.py")))
+    print(f"docs check OK ({n_md} markdown files, {n_ex} examples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

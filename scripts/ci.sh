@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Lightweight CI: tier-1 tests + fast benchmark sweep with perf record.
+# Lightweight CI: docs check + tier-1 tests + fast benchmark sweep with
+# perf record.
 #
 #   scripts/ci.sh            # full tier-1 (skips hypothesis tests if absent)
 #   CI_SKIP_SLOW=1 scripts/ci.sh   # core model/engine tests only
@@ -7,6 +8,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# docs health: README/docs links resolve, every example import-checks
+python scripts/check_docs.py
 
 PYTEST_ARGS=(-x -q)
 if ! python -c "import hypothesis" 2>/dev/null; then
@@ -17,7 +21,8 @@ fi
 if [[ "${CI_SKIP_SLOW:-0}" == "1" ]]; then
     python -m pytest "${PYTEST_ARGS[@]}" \
         tests/test_graph.py tests/test_trace.py tests/test_cost_fusion.py \
-        tests/test_checkpointing.py tests/test_engine_parity.py
+        tests/test_checkpointing.py tests/test_engine_parity.py \
+        tests/test_parallel.py
 else
     python -m pytest "${PYTEST_ARGS[@]}"
 fi

@@ -13,22 +13,29 @@ Layers:
   remat_policy                — MONET decision → real jax.checkpoint policy
 """
 
-from .accelerators import (EDGE_TPU_SPACE, FUSEMAX_SPACE, TPU_V5E, CoreSpec,
-                           HDASpec, MemLevel, edge_tpu, fusemax, grid,
-                           tpu_v5e_like)
+from .accelerators import (EDGE_TPU_SPACE, FUSEMAX_SPACE, TPU_V5E,
+                           ClusterSpec, CoreSpec, HDASpec, MemLevel,
+                           datacenter_cluster, edge_cluster, edge_tpu,
+                           fusemax, grid, tpu_v5e_like, with_interconnect)
 from .builders import GraphBuilder
 from .checkpointing import (ACResult, ACSolution, activation_set,
                             apply_checkpointing, evaluate_checkpointing,
                             ga_checkpointing, knapsack_baseline,
                             recompute_flops, stored_activation_bytes)
-from .cost_model import CostModel, NodeCost
-from .dse import DSEPoint, compute_resource, pareto_front, spread, sweep
+from .cost_model import (CostModel, NodeCost, collective_wire, comm_cycles,
+                         comm_node_cost)
+from .dse import (DSEPoint, ParallelPoint, compute_resource, pareto_front,
+                  spread, sweep, sweep_parallel)
 from .engine import (EvalEngine, GraphSigs, clear_engines, get_engine,
                      graph_sigs)
 from .fusion import (FusionConfig, enumerate_candidates, layer_by_layer,
                      manual_fusion, solve_cover, solve_fusion)
 from .graph import GraphError, Node, TensorSpec, WorkloadGraph
-from .nsga2 import NSGA2Result, crowding_distance, fast_non_dominated_sort, nsga2
+from .nsga2 import (NSGA2Result, crowding_distance, fast_non_dominated_sort,
+                    nsga2, nsga2_int)
+from .parallel import (ParallelPlan, ParallelResult, ParallelStrategy,
+                       evaluate_parallel, ga_parallel, graph_wire_bytes,
+                       parallelize, strategy_space)
 from .remat_policy import keepset_to_policy, policy_from_keep, resolve_remat
 from .scheduling import ScheduleResult, quotient_dag, schedule
 from .trace import trace_fn, trace_model

@@ -23,6 +23,7 @@ E_OFFCHIP_PER_BYTE = 64.0   # LPDDR-class DRAM access
 E_LINK_PER_BYTE = 4.0       # on-chip NoC / bus hop
 LEAK_PER_LANE = 0.02        # pJ / cycle / MAC lane (static+clock)
 LEAK_PER_MB = 8.0           # pJ / cycle / MB of on-chip SRAM
+E_ICI_PER_BYTE = 16.0       # chip-to-chip SerDes hop (between NoC and DRAM)
 
 
 def sram_energy_per_byte(size_bytes: int) -> float:
@@ -78,6 +79,11 @@ class HDASpec:
     link_bw: float = 64.0               # bytes / cycle, inter-core
     link_e: float = E_LINK_PER_BYTE
     freq_ghz: float = 1.0
+    # inter-chip interconnect (multi-accelerator training — repro.core.parallel)
+    ici_bw: float = 0.0                 # bytes / cycle per chip, 0 = no ICI
+    ici_latency: float = 0.0            # cycles per collective hop
+    ici_topology: str = "ring"          # ring | full | mesh2d
+    ici_e: float = E_ICI_PER_BYTE       # pJ / byte over the interconnect
 
     @property
     def total_macs(self) -> int:
@@ -255,3 +261,69 @@ def grid(space: dict) -> list[dict]:
     for k in keys:
         out = [{**d, k: v} for d in out for v in space[k]]
     return out
+
+
+# ---------------------------------------------------------------------------
+# multi-accelerator clusters (edge boards → data-center pods)
+# ---------------------------------------------------------------------------
+
+
+def with_interconnect(hda: HDASpec, bw: float, latency: float,
+                      topology: str = "ring",
+                      e_per_byte: float = E_ICI_PER_BYTE) -> HDASpec:
+    """A copy of ``hda`` with its inter-chip interconnect fields set.  The
+    result is a distinct frozen spec, so the engine registry keys it (and its
+    cost caches) separately from the single-chip variant."""
+    return replace(hda, ici_bw=bw, ici_latency=latency,
+                   ici_topology=topology, ici_e=e_per_byte)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """``n_chips`` identical HDAs joined by an inter-chip interconnect.
+
+    ``chip`` must carry the interconnect parameters (``ici_bw`` etc. — use
+    :func:`with_interconnect`); ``mem_capacity`` is the per-chip off-chip
+    memory ceiling fed to the feasibility check of parallel schedules
+    (0 = unconstrained)."""
+
+    chip: HDASpec
+    n_chips: int
+    mem_capacity: int = 0            # bytes per chip, 0 = unlimited
+
+    @property
+    def name(self) -> str:
+        return (f"{self.chip.name}_x{self.n_chips}"
+                f"_{self.chip.ici_topology}")
+
+    def __post_init__(self):
+        if self.n_chips < 1:
+            raise ValueError("cluster needs at least one chip")
+
+
+def edge_cluster(n_chips: int = 4, chip: HDASpec | None = None,
+                 topology: str = "ring", mem_mb: float = 512.0) -> ClusterSpec:
+    """Board-level cluster of Edge-TPU-class chips: PCB traces / PCIe-class
+    interconnect (~4 B/cycle/chip at 1 GHz ≈ 4 GB/s, µs-scale latency)."""
+    base = chip or edge_tpu()
+    return ClusterSpec(
+        chip=with_interconnect(base, bw=4.0, latency=2000.0,
+                               topology=topology),
+        n_chips=n_chips,
+        mem_capacity=int(mem_mb * (1 << 20)),
+    )
+
+
+def datacenter_cluster(n_chips: int = 8, chip: HDASpec | None = None,
+                       topology: str = "ring",
+                       mem_gb: float = 16.0) -> ClusterSpec:
+    """Pod-slice cluster of TPU-v5e-class chips: ICI links (~50 GB/s/link ≈
+    53 B/cycle at 0.94 GHz, sub-µs latency), torus/ring topology."""
+    base = chip or tpu_v5e_like()
+    bw = TPU_V5E["ici_bw_per_link"] / (base.freq_ghz * 1e9)
+    return ClusterSpec(
+        chip=with_interconnect(base, bw=bw, latency=500.0,
+                               topology=topology),
+        n_chips=n_chips,
+        mem_capacity=int(mem_gb * (1 << 30)),
+    )

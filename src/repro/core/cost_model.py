@@ -69,11 +69,103 @@ def _loop_mapping(node: Node, core: CoreSpec) -> dict:
     return {}
 
 
-def compute_cycles(node: Node, core: CoreSpec, tp: int = 1) -> float:
+# -- collective communication (multi-accelerator training) -------------------
+#
+# A ``comm`` node models one collective over P chips joined by the HDA's
+# inter-chip interconnect (``ici_bw`` bytes/cycle/chip, ``ici_latency``
+# cycles/hop).  Its dims carry the *full* (unsharded) payload:
+# ``N`` elements, ``E`` bytes/element, ``P`` chips.  Wire traffic per chip
+# follows the bandwidth-optimal algorithms (ring as the canonical case):
+#
+#   all-reduce       2·(P−1)/P · bytes     ring: 2(P−1) hops
+#   all-gather         (P−1)/P · bytes     ring:  (P−1) hops
+#   reduce-scatter     (P−1)/P · bytes     ring:  (P−1) hops
+#   all-to-all         (P−1)/P · bytes     ring:  (P−1) hops
+#   send (p2p)                 bytes              1 hop
+#   recv (p2p)                 0 transmitted      1 hop (the matching send
+#                              already counts the physical bytes; the recv
+#                              still *occupies* the receiver's link for the
+#                              full payload time — see comm_cycles)
+#
+# Switched ('full') topologies keep the same wire bytes (bandwidth lower
+# bound) but collapse the hop count; 2-D meshes pay √P-scaled hops.
+
+_COMM_WIRE = {                     # op -> wire-bytes multiplier builder
+    "all_reduce": lambda p: 2.0 * (p - 1) / p,
+    "all_gather": lambda p: (p - 1) / p,
+    "reduce_scatter": lambda p: (p - 1) / p,
+    "all_to_all": lambda p: (p - 1) / p,
+    "send": lambda p: 1.0,
+    "recv": lambda p: 0.0,
+}
+
+
+def comm_payload(dims: dict) -> float:
+    """Full (unsharded) payload bytes encoded in a comm node's dims
+    (``N`` elements × ``E`` bytes/element) — the single place the encoding
+    is interpreted."""
+    return dims.get("N", 1) * dims.get("E", 2)
+
+
+def collective_wire(op: str, nbytes: float, p: int,
+                    topology: str = "ring") -> tuple[float, int]:
+    """(wire bytes per chip, latency hops) of one collective of ``nbytes``
+    payload over ``p`` chips."""
+    if p <= 1:
+        return 0.0, 0
+    mult = _COMM_WIRE.get(op)
+    if mult is None:
+        raise ValueError(f"unknown collective op {op!r}")
+    wire = mult(p) * nbytes
+    if op in ("send", "recv"):
+        hops = 1
+    elif topology == "full":
+        hops = 2 if op == "all_reduce" else 1
+    elif topology == "mesh2d":
+        side = max(1, round(math.sqrt(p)))
+        hops = (4 if op == "all_reduce" else 2) * max(side - 1, 1)
+    else:                                          # ring (default)
+        hops = (2 if op == "all_reduce" else 1) * (p - 1)
+    return wire, hops
+
+
+def comm_cycles(node: Node, hda: HDASpec) -> float:
+    """Interconnect cycles of one collective node (link occupancy + hop
+    latency).  A recv transmits nothing (its send carries the bytes) but
+    still holds the receiver's link for the full payload time."""
+    d = node.dims
+    payload = comm_payload(d)
+    wire, hops = collective_wire(node.op, payload, int(d.get("P", 1)),
+                                 hda.ici_topology)
+    occupancy = payload if node.op == "recv" else wire
+    return max(occupancy / max(hda.ici_bw, 1e-9) + hops * hda.ici_latency,
+               1.0)
+
+
+def comm_node_cost(cyc: float, inb: float, outb: float, wire: float,
+                   hda: HDASpec) -> NodeCost:
+    """NodeCost of a collective: the payload still streams through each
+    chip's off-chip memory (inb read + outb written), overlapped with the
+    wire transfer; energy pays DRAM + SerDes.  Scheduled on the dedicated
+    'ici' resource so collectives overlap with compute on other cores."""
+    offchip = inb + outb
+    mem_cycles = offchip / max(hda.offchip_bw, 1e-9)
+    cycles = max(cyc, mem_cycles, 1.0)
+    energy = offchip * hda.offchip_e + wire * hda.ici_e
+    return NodeCost(cycles, offchip, 0.0, wire, energy, "ici")
+
+
+def compute_cycles(node: Node, core: CoreSpec, tp: int = 1,
+                   hda: HDASpec | None = None) -> float:
     """Cycles to execute ``node`` on ``core`` with ``tp``-way tensor
     parallelism over identical core replicas (output channels split —
-    paper §IV-A)."""
+    paper §IV-A).  ``comm``-class nodes ignore the core and cost against
+    ``hda``'s inter-chip interconnect."""
     cls = node.op_class
+    if cls == "comm":
+        if hda is None:
+            raise ValueError("comm node cost needs the HDASpec (interconnect)")
+        return comm_cycles(node, hda)
     if cls in ("conv", "gemm"):
         m = _loop_mapping(node, core)
         spatial = dict(core.spatial)
@@ -192,6 +284,15 @@ class CostModel:
 
     def node_cost(self, node: Node, resident: set = frozenset(),
                   internal_out: set = frozenset()) -> NodeCost:
+        if node.op_class == "comm":
+            d = node.dims
+            wire, _ = collective_wire(node.op, comm_payload(d),
+                                      int(d.get("P", 1)),
+                                      self.hda.ici_topology)
+            return comm_node_cost(comm_cycles(node, self.hda),
+                                  self.in_bytes(node, resident),
+                                  self.out_bytes(node, internal_out),
+                                  wire, self.hda)
         core = self.core_for(node)
         tp = self.tp_for(node, core)
         cyc = compute_cycles(node, core, tp)
@@ -237,10 +338,14 @@ class CostModel:
         for nd in node_objs:
             c = self.node_cost(nd, resident=resident | internal,
                                internal_out=internal)
-            core = self.core_for(nd)
-            per_core_cycles[core.name] = (per_core_cycles.get(core.name, 0.0)
-                                          + compute_cycles(nd, core,
-                                                           self.tp_for(nd, core)))
+            if nd.op_class == "comm":
+                per_core_cycles["ici"] = (per_core_cycles.get("ici", 0.0)
+                                          + comm_cycles(nd, self.hda))
+            else:
+                core = self.core_for(nd)
+                per_core_cycles[core.name] = (
+                    per_core_cycles.get(core.name, 0.0)
+                    + compute_cycles(nd, core, self.tp_for(nd, core)))
             offchip += c.offchip_bytes
             local += c.local_bytes
             energy += c.energy_pj

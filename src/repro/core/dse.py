@@ -60,6 +60,62 @@ def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
     return points
 
 
+@dataclass
+class ParallelPoint:
+    """One (chip count × strategy) cell of a parallel-training sweep."""
+
+    n_chips: int
+    strategy: object                # ParallelStrategy
+    results: dict                   # workload name -> ParallelResult
+
+    def row(self) -> dict:
+        out = dict(chips=self.n_chips, strategy=self.strategy.label,
+                   dp=self.strategy.data, tp=self.strategy.tensor,
+                   pp=self.strategy.pipeline,
+                   microbatches=self.strategy.microbatches)
+        for wname, r in self.results.items():
+            out[f"{wname}_latency"] = r.latency
+            out[f"{wname}_energy"] = r.energy
+            out[f"{wname}_peak_mem"] = r.peak_mem
+            out[f"{wname}_throughput"] = r.throughput
+            out[f"{wname}_wire_bytes"] = r.wire_bytes
+            out[f"{wname}_feasible"] = r.feasible
+        return out
+
+
+def sweep_parallel(workloads: dict, make_cluster, chip_counts,
+                   strategies=None, fusion: str = "manual",
+                   microbatches: int | None = None) -> list:
+    """Parallel-training scale sweep: evaluate every parallelism strategy of
+    every chip count on each training workload.
+
+    ``workloads``: name → TrainingGraph (built at the per-chip local batch);
+    ``make_cluster(n)``: ClusterSpec factory (e.g. ``edge_cluster`` /
+    ``datacenter_cluster``); ``strategies``: optional explicit list of
+    ParallelStrategy (must match the chip count) — default: every
+    factorization from ``strategy_space``.  One engine per cluster chip is
+    shared across all strategies, so only each strategy's rewrite delta is
+    re-costed (the comm nodes + rescaled layers)."""
+    from .parallel import evaluate_parallel, strategy_space
+
+    points: list[ParallelPoint] = []
+    for n in chip_counts:
+        cluster = make_cluster(n)
+        engine = get_engine(cluster.chip)
+        strats = strategies if strategies is not None else \
+            strategy_space(n, microbatches=microbatches)
+        for strat in strats:
+            if strat.chips != n:
+                continue
+            results = {}
+            for wname, tg in workloads.items():
+                results[wname] = evaluate_parallel(tg, cluster, strat,
+                                                   fusion=fusion,
+                                                   engine=engine)
+            points.append(ParallelPoint(n, strat, results))
+    return points
+
+
 def pareto_front(points: list, metrics) -> list:
     """Non-dominated subset w.r.t. ``metrics``: callables point→float
     (minimize)."""

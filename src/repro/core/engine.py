@@ -39,8 +39,9 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from .accelerators import CoreSpec, HDASpec
-from .cost_model import (CostModel, NodeCost, compute_cycles, node_cost_arith,
-                         subgraph_tail)
+from .cost_model import (CostModel, NodeCost, collective_wire,
+                         comm_node_cost, comm_payload, compute_cycles,
+                         node_cost_arith, subgraph_tail)
 from .graph import Node, WorkloadGraph, dtype_bytes
 
 # ---------------------------------------------------------------------------
@@ -87,6 +88,19 @@ def _core_key(core: CoreSpec, tp: int, hda: HDASpec) -> int:
     return i
 
 
+def _comm_key(hda: HDASpec) -> int:
+    """Interned id of the facts a collective's cost depends on: interconnect
+    + off-chip memory.  Chips with different compute cores but the same
+    interconnect share collective cost entries across a sweep."""
+    k = ("comm", hda.offchip_bw, hda.offchip_e, hda.ici_bw,
+         hda.ici_latency, hda.ici_topology, hda.ici_e)
+    i = _CORE_KEYS.get(k)
+    if i is None:
+        i = len(_CORE_KEYS)
+        _CORE_KEYS[k] = i
+    return i
+
+
 def tiling_factor(op_class: str, dims: dict) -> int:
     """Outer temporal loop extent used as the intra-core tiling factor
     (shared with the fusion solver's candidate enumeration)."""
@@ -120,7 +134,7 @@ class GraphSigs:
     node_macs: dict = field(default_factory=dict)  # node -> macs
     fp_entry: dict = field(default_factory=dict)  # node -> fingerprint entry
     static: int = 0                # Σ bytes of param/state/input tensors
-    static_names: set = field(default_factory=set)
+    static_names: dict = field(default_factory=dict)  # name -> counted bytes
     macs_total: int = 0
     _fp: "Fingerprint | None" = None              # lazy schedule fingerprint
 
@@ -129,7 +143,7 @@ class GraphSigs:
                          dict(self.zmask), dict(self.io_bytes),
                          dict(self.tiling), dict(self.node_macs),
                          dict(self.fp_entry), self.static,
-                         set(self.static_names), self.macs_total, self._fp)
+                         dict(self.static_names), self.macs_total, self._fp)
 
 
 _NO_MASK = ((), ())     # shared empty masks
@@ -152,7 +166,10 @@ def _sign_node(graph: WorkloadGraph, s: GraphSigs, name: str) -> None:
     out_bytes = tuple(tb[t] for t in outs)
     eb = dtype_bytes(tensors[outs[0]].dtype) if outs else 2
     cls = nd.op_class
-    sig = (cls, tuple(sorted(nd.dims.items())), nd.flops,
+    # comm ops differ in wire/hop formulas per collective, so the concrete
+    # op (not just the class) is part of the signature
+    sig = (nd.op if cls == "comm" else cls,
+           tuple(sorted(nd.dims.items())), nd.flops,
            in_bytes, in_pat, out_bytes, eb)
     i = _sig_id(sig)
     s.sid[name] = i
@@ -184,7 +201,7 @@ def _count_static(graph: WorkloadGraph, s: GraphSigs, names) -> None:
         spec = tensors[t]
         if spec.is_param or spec.is_state or spec.is_input:
             s.static += spec.bytes
-            seen.add(t)
+            seen[t] = spec.bytes
 
 
 def graph_sigs(graph: WorkloadGraph) -> GraphSigs:
@@ -192,7 +209,19 @@ def graph_sigs(graph: WorkloadGraph) -> GraphSigs:
     if cached is not None and cached.gen == _SIG_GEN:
         if cached.version == graph._version:
             return cached
-        # incremental: re-sign only nodes mutated since the tables were built
+        # incremental: refresh byte tables for re-specced tensors
+        # (``replace_tensor``), then re-sign only the mutated nodes
+        for t in graph._dirty_tensors:
+            spec = graph.tensors.get(t)
+            if spec is None:
+                continue
+            nb = spec.bytes
+            if cached.tb.get(t, nb) != nb:
+                cached.tb[t] = nb
+            ob = cached.static_names.get(t)
+            if ob is not None and ob != nb:
+                cached.static += nb - ob
+                cached.static_names[t] = nb
         for name in graph._dirty_nodes:
             _sign_node(graph, cached, name)
         _count_static(graph, cached, graph._dirty_tensors)
@@ -267,6 +296,7 @@ class EvalEngine:
         # interned (core, tp, offchip) ids: the only HDA facts node costs see
         self._ck_compute = _core_key(self._compute, tp, hda)
         self._ck_simd = _core_key(self._simd, 1, hda)
+        self._ck_comm = _comm_key(hda)
         self._sg: dict[tuple, NodeCost] = {}      # subgraph signature
         self._sched: OrderedDict = OrderedDict()  # (fingerprint, partition)
         self._sched_cap = 256
@@ -294,6 +324,8 @@ class EvalEngine:
     def ckey_for_class(self, op_class: str) -> int:
         if op_class in ("conv", "gemm"):
             return self._ck_compute
+        if op_class == "comm":
+            return self._ck_comm
         return self._ck_simd
 
     def tp_for_class(self, op_class: str, core: CoreSpec) -> int:
@@ -342,7 +374,8 @@ class BoundEngine:
         cyc = _CYC.get(k)
         if cyc is None:
             core = eng.core_for_class(nd.op_class)
-            cyc = compute_cycles(nd, core, eng.tp_for_class(nd.op_class, core))
+            cyc = compute_cycles(nd, core, eng.tp_for_class(nd.op_class, core),
+                                 eng.hda)
             _CYC[k] = cyc
         return cyc
 
@@ -370,6 +403,14 @@ class BoundEngine:
         for i, t in enumerate(nd.outputs):
             if not imask[i]:
                 outb += tb[t]
+        if nd.op_class == "comm":
+            d = nd.dims
+            wire, _ = collective_wire(nd.op, comm_payload(d),
+                                      int(d.get("P", 1)),
+                                      eng.hda.ici_topology)
+            c = comm_node_cost(cyc, inb, outb, wire, eng.hda)
+            _NODE_COSTS[key] = c
+            return c
         stationary = streamed = None
         if nd.op_class in ("conv", "gemm") and len(nd.inputs) >= 2:
             if core.dataflow == "ws":
@@ -409,7 +450,8 @@ class BoundEngine:
                 return cached
             eng.stats["sg_misses"] += 1
             c = self.node_cost(nd, *tri)
-            cname = eng.core_for_class(nd.op_class).name
+            cname = "ici" if nd.op_class == "comm" \
+                else eng.core_for_class(nd.op_class).name
             res = subgraph_tail({cname: self._cycles(
                 eng.ckey_for_class(nd.op_class), tri[0], nd)},
                 c.offchip_bytes, c.local_bytes, 0.0, c.energy_pj, 0,
@@ -455,7 +497,7 @@ class BoundEngine:
         for nd, tri in zip(node_objs, triples):
             c = self.node_cost(nd, *tri)
             cls = nd.op_class
-            cname = eng.core_for_class(cls).name
+            cname = "ici" if cls == "comm" else eng.core_for_class(cls).name
             cyc = self._cycles(eng.ckey_for_class(cls), tri[0], nd)
             per_core[cname] = per_core.get(cname, 0.0) + cyc
             offchip += c.offchip_bytes

@@ -100,6 +100,8 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
     for seed in range(n):
         if time.monotonic() > deadline or len(candidates) >= cfg.max_candidates:
             break
+        if ix.node(seed).op_class == "comm":
+            continue    # collectives run on the interconnect: never fused
         seed_desc = ix.desc[seed]
         per_seed = 0
         # DFS over grow decisions
@@ -125,6 +127,8 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
                         frontier.add(v)
             for v in sorted(frontier):
                 nd = ix.node(v)
+                if nd.op_class == "comm":
+                    continue
                 c2 = _add_counts(counts, nd)
                 if c2[0] > cfg.max_conv or c2[1] > cfg.max_gemm:
                     continue

@@ -101,6 +101,14 @@ OP_CLASS = {
     "loss_bwd": "simd",
     "opt": "simd",
     "scan": "simd",
+    # inter-chip collective-communication nodes (parallel training —
+    # see repro.core.parallel): costed against the cluster interconnect
+    "all_reduce": "comm",
+    "all_gather": "comm",
+    "reduce_scatter": "comm",
+    "all_to_all": "comm",
+    "send": "comm",
+    "recv": "comm",
 }
 
 
@@ -375,6 +383,38 @@ class WorkloadGraph:
                     hasattr(payload, "clone"):
                 g._derived[tag] = payload.clone(g._version)
         return g
+
+    def replace_tensor(self, spec: TensorSpec) -> TensorSpec:
+        """Re-spec an existing tensor in place (e.g. a parallelism transform
+        sharding a weight to 1/tp of its bytes).  The producer and every
+        consumer are marked dirty so engine signature tables re-sign them
+        with the new byte counts."""
+        if spec.name not in self.tensors:
+            raise GraphError(f"replace_tensor: unknown tensor {spec.name!r}")
+        self.tensors[spec.name] = spec
+        self._version += 1
+        self._dirty_tensors.add(spec.name)
+        p = self.producer.get(spec.name)
+        if p is not None:
+            self._dirty_nodes.add(p)
+        for c in self.consumers.get(spec.name, ()):
+            self._dirty_nodes.add(c)
+        return spec
+
+    def retune_node(self, name: str, dims: dict | None = None,
+                    flops: int | None = None) -> Node:
+        """Rewrite a node's loop dims / flop count in place (parallelism
+        transforms scale the contraction dim by 1/tp).  Bumps the structural
+        version and dirties the node so cached signatures re-derive."""
+        nd = self.nodes[name]
+        if dims is not None:
+            nd.dims = dict(dims)
+        if flops is not None:
+            nd.flops = int(flops)
+            nd.__dict__.pop("macs", None)     # cached_property on flops
+        self._version += 1
+        self._dirty_nodes.add(name)
+        return nd
 
     def rename_tensor_for(self, node: str, old: str, new: str) -> None:
         """Rewire one consumer edge: ``node`` reads ``new`` instead of ``old``."""

@@ -1,8 +1,10 @@
-"""Clean-room NSGA-II (Deb et al., 2002) for multi-objective bitmask search.
+"""Clean-room NSGA-II (Deb et al., 2002) for multi-objective search.
 
-Used by the activation-checkpointing optimizer (paper §V-B): elitist
-(μ+λ) survival with fast non-dominated sorting and crowding-distance
-diversity.  Validated on ZDT1 in the tests.
+Two genome representations share the elitist (μ+λ) survival machinery:
+``nsga2`` over bitmasks (the activation-checkpointing optimizer, paper
+§V-B) and ``nsga2_int`` over bounded integer vectors (the parallel-training
+strategy search, ``repro.core.parallel.ga_parallel``).  Validated on ZDT1
+in the tests.
 """
 
 from __future__ import annotations
@@ -58,6 +60,71 @@ class NSGA2Result:
     history: list          # best-front hypervolume proxy per generation
 
 
+def _rank_and_crowd(Fm: np.ndarray):
+    fronts = fast_non_dominated_sort(Fm)
+    rank = np.empty(Fm.shape[0], dtype=int)
+    crowd = np.empty(Fm.shape[0])
+    for r, fr in enumerate(fronts):
+        rank[fr] = r
+        crowd[fr] = crowding_distance(Fm[fr])
+    return rank, crowd, fronts
+
+
+def _evolve(evaluate, X: np.ndarray, rng, generations: int,
+            p_crossover: float, crossover, mutate) -> NSGA2Result:
+    """Shared NSGA-II core: binary-tournament selection, elitist (μ+λ)
+    survival with crowding truncation, and Pareto-front dedup.  The genome
+    representation lives entirely in the ``crossover(a, b)`` / ``mutate(c)``
+    operators (both mutate in place, drawing from ``rng``)."""
+    pop_size, n_var = X.shape
+    F = np.array([evaluate(x) for x in X], dtype=float)
+    rank, crowd, _ = _rank_and_crowd(F)
+    history: list = []
+
+    for _ in range(generations):
+        def pick():
+            i, j = rng.integers(0, pop_size, 2)
+            if (rank[i], -crowd[i]) <= (rank[j], -crowd[j]):
+                return i
+            return j
+
+        children = []
+        while len(children) < pop_size:
+            a, b = X[pick()].copy(), X[pick()].copy()
+            if rng.random() < p_crossover and n_var > 1:
+                crossover(a, b)
+            for c in (a, b):
+                mutate(c)
+                children.append(c)
+        C = np.array(children[:pop_size])
+        CF = np.array([evaluate(c) for c in C], dtype=float)
+
+        # elitist (μ+λ) survival
+        XA = np.concatenate([X, C])
+        FA = np.concatenate([F, CF])
+        r2, c2, fronts = _rank_and_crowd(FA)
+        chosen: list[int] = []
+        for fr in fronts:
+            if len(chosen) + len(fr) <= pop_size:
+                chosen.extend(fr.tolist())
+            else:
+                rem = pop_size - len(chosen)
+                order = fr[np.argsort(-c2[fr])]
+                chosen.extend(order[:rem].tolist())
+                break
+        idx = np.array(chosen)
+        X, F = XA[idx], FA[idx]
+        rank, crowd, _ = _rank_and_crowd(F)
+        history.append(float(F[rank == 0].mean()))
+
+    fronts = fast_non_dominated_sort(F)
+    pf = fronts[0]
+    # dedupe identical objective rows on the front
+    _, uniq = np.unique(F[pf].round(9), axis=0, return_index=True)
+    pf = pf[np.sort(uniq)]
+    return NSGA2Result(X, F, X[pf], F[pf], history)
+
+
 def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
           seed: int = 0, p_crossover: float = 0.9,
           p_mutation: float | None = None, init: np.ndarray | None = None,
@@ -71,62 +138,46 @@ def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
         k = min(len(init), pop_size)
         X[:k] = init[:k]
     X[0] = True   # always seed the all-keep (baseline) individual
-    F = np.array([evaluate(x) for x in X], dtype=float)
 
-    def rank_and_crowd(Fm):
-        fronts = fast_non_dominated_sort(Fm)
-        rank = np.empty(Fm.shape[0], dtype=int)
-        crowd = np.empty(Fm.shape[0])
-        for r, fr in enumerate(fronts):
-            rank[fr] = r
-            crowd[fr] = crowding_distance(Fm[fr])
-        return rank, crowd, fronts
+    def crossover(a, b):                 # one-point tail swap
+        cut = rng.integers(1, n_var)
+        a[cut:], b[cut:] = b[cut:].copy(), a[cut:].copy()
 
-    rank, crowd, _ = rank_and_crowd(F)
-    history = []
+    def mutate(c):                       # independent bit flips
+        flip = rng.random(n_var) < p_mut
+        c[flip] = ~c[flip]
 
-    for _ in range(generations):
-        # binary tournament selection
-        def pick():
-            i, j = rng.integers(0, pop_size, 2)
-            if (rank[i], -crowd[i]) <= (rank[j], -crowd[j]):
-                return i
-            return j
+    return _evolve(evaluate, X, rng, generations, p_crossover,
+                   crossover, mutate)
 
-        children = []
-        while len(children) < pop_size:
-            a, b = X[pick()].copy(), X[pick()].copy()
-            if rng.random() < p_crossover and n_var > 1:
-                cut = rng.integers(1, n_var)
-                a[cut:], b[cut:] = b[cut:].copy(), a[cut:].copy()
-            for c in (a, b):
-                flip = rng.random(n_var) < p_mut
-                c[flip] = ~c[flip]
-                children.append(c)
-        C = np.array(children[:pop_size])
-        CF = np.array([evaluate(c) for c in C], dtype=float)
 
-        # elitist (μ+λ) survival
-        XA = np.concatenate([X, C])
-        FA = np.concatenate([F, CF])
-        r2, c2, fronts = rank_and_crowd(FA)
-        chosen: list[int] = []
-        for fr in fronts:
-            if len(chosen) + len(fr) <= pop_size:
-                chosen.extend(fr.tolist())
-            else:
-                rem = pop_size - len(chosen)
-                order = fr[np.argsort(-c2[fr])]
-                chosen.extend(order[:rem].tolist())
-                break
-        idx = np.array(chosen)
-        X, F = XA[idx], FA[idx]
-        rank, crowd, _ = rank_and_crowd(F)
-        history.append(float(F[rank == 0].mean()))
+def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
+              generations: int = 10, seed: int = 0,
+              p_crossover: float = 0.9, p_mutation: float | None = None,
+              ) -> NSGA2Result:
+    """Integer-genome NSGA-II for categorical/mixed search spaces (chip count
+    × parallelism strategy × checkpointing budget — see
+    ``repro.core.parallel.ga_parallel``).
 
-    fronts = fast_non_dominated_sort(F)
-    pf = fronts[0]
-    # dedupe identical objective rows on the front
-    _, uniq = np.unique(F[pf].round(9), axis=0, return_index=True)
-    pf = pf[np.sort(uniq)]
-    return NSGA2Result(X, F, X[pf], F[pf], history)
+    ``bounds``: per-gene ``(lo, hi)`` inclusive ranges.
+    ``evaluate(genome: np.ndarray[int]) -> tuple`` of objectives (minimize).
+    Uniform crossover + per-gene uniform-resample mutation."""
+    rng = np.random.default_rng(seed)
+    n_var = len(bounds)
+    lo = np.array([b[0] for b in bounds], dtype=int)
+    hi = np.array([b[1] for b in bounds], dtype=int)
+    p_mut = p_mutation if p_mutation is not None else 1.0 / max(n_var, 1)
+
+    X = rng.integers(lo, hi + 1, size=(pop_size, n_var))
+
+    def crossover(a, b):                 # uniform gene swap
+        swap = rng.random(n_var) < 0.5
+        a[swap], b[swap] = b[swap].copy(), a[swap].copy()
+
+    def mutate(c):                       # uniform resample within bounds
+        flip = rng.random(n_var) < p_mut
+        if flip.any():
+            c[flip] = rng.integers(lo[flip], hi[flip] + 1)
+
+    return _evolve(evaluate, X, rng, generations, p_crossover,
+                   crossover, mutate)

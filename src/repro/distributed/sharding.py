@@ -101,22 +101,33 @@ def resolve_axes(logical: str | None, mesh: Mesh) -> tuple:
 
 def pspec(logical_axes, mesh: Mesh | None = None) -> P:
     """logical axes tuple (one entry per tensor dim; None = replicated) →
-    PartitionSpec resolved against the mesh."""
+    PartitionSpec resolved against the mesh.
+
+    A logical axis whose *rule* names several physical axes always resolves
+    to a tuple entry (even when only one of them is present on this mesh),
+    so specs are mesh-shape-stable; single-axis rules resolve to the bare
+    axis name.  Current ``jax.sharding.PartitionSpec`` compares entries
+    structurally ('data' != ('data',)), so this distinction is load-bearing.
+    """
     mesh = mesh or current_mesh()
     if mesh is None:
         return P()
+    rules = current_rules()
     used: set = set()
     parts = []
     for ax in logical_axes:
-        phys = resolve_axes(ax, mesh)
-        phys = tuple(a for a in phys if a not in used)
+        if ax is not None and ax not in rules:
+            raise KeyError(f"unknown logical axis {ax!r}")
+        rule = rules.get(ax, ())
+        phys = tuple(a for a in rule if a in mesh.axis_names
+                     and a not in used)
         used.update(phys)
         if len(phys) == 0:
             parts.append(None)
-        elif len(phys) == 1:
-            parts.append(phys[0])
-        else:
+        elif len(rule) > 1:
             parts.append(tuple(phys))
+        else:
+            parts.append(phys[0])
     return P(*parts)
 
 
@@ -147,6 +158,16 @@ def prune_pspec(shape: tuple, spec: P, mesh: Mesh) -> P:
     while out and out[-1] is None:
         out.pop()
     return P(*out)
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, **kw):
+    """Version-stable ``shard_map``: prefer the public ``jax.shard_map``
+    (JAX ≥ 0.6), fall back to the experimental module on older releases.
+    Keyword-only call style works across both signatures."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 def shard(x, *logical_axes):

@@ -107,7 +107,8 @@ def embed_lookup(table, tokens, enabled: bool = True):
     from its local vocab slice with out-of-range rows masked to zero and the
     partials are psum'ed — no replicated intermediate ever exists.
     """
-    from ..distributed.sharding import current_mesh, pspec, prune_pspec
+    from ..distributed.sharding import (current_mesh, prune_pspec,
+                                        shard_map)
     from jax.sharding import PartitionSpec as P
 
     mesh = current_mesh()
@@ -133,8 +134,8 @@ def embed_lookup(table, tokens, enabled: bool = True):
         x = jnp.where(ok, x, jnp.zeros((), x.dtype))
         return jax.lax.psum(x, "model")
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(tbl_spec, tok_spec),
-                         out_specs=out_spec)(table, tokens)
+    return shard_map(body, mesh=mesh, in_specs=(tbl_spec, tok_spec),
+                     out_specs=out_spec)(table, tokens)
 
 
 # -- MLP variants ------------------------------------------------------------

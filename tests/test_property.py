@@ -1,8 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+The whole module is skipped (not a collection error) when ``hypothesis``
+is absent — it is a dev/CI dependency (see requirements-dev.txt), not a
+runtime one.
+"""
 
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (FusionConfig, GraphBuilder, build_training_graph,
                         edge_tpu, knapsack_baseline, quotient_dag, schedule,
