@@ -1,0 +1,69 @@
+"""Unified memory-subsystem benchmark (repro.core.memory).
+
+* ``memory_lifetime_plan`` — cold build of the lifetime arrays (SoA tensor
+  intervals + categories) for a ResNet-18 training schedule;
+* ``memory_profile_warm`` — repeated interval-peak evaluation on the cached
+  plan (the per-schedule incremental cost);
+* ``memory_policy_eval`` — KEEP vs all-RECOMPUTE vs all-OFFLOAD through the
+  full fusion-aware model on a shared engine, with the recompute-vs-offload
+  headline (peak/latency deltas) in the derived column.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ActivationPolicy, build_training_graph, edge_tpu,
+                        evaluate_policy, get_engine, graph_sigs,
+                        lifetime_profile, manual_fusion, resnet18_graph,
+                        uniform_policy)
+from repro.core.fusion import repair_partition
+from repro.core.memory import build_lifetime_plan
+
+from .common import emit, timed
+
+
+def run(image: int = 32, batch: int = 4):
+    hda = edge_tpu()
+    tg = build_training_graph(resnet18_graph(batch, image), "adam")
+    g = tg.graph
+    part = [tuple(sg) for sg in repair_partition(g, manual_fusion(g))]
+
+    plan, us_plan = timed(build_lifetime_plan, g, part, graph_sigs(g))
+    emit("memory_lifetime_plan", us_plan,
+         f"tensors={plan.prod_sg.size};steps={plan.n_steps};"
+         f"static_mb={plan.static / 1e6:.1f}")
+
+    perm = np.arange(plan.n_steps, dtype=np.int64)
+    reps = 50
+    _, us_prof = timed(lambda: [lifetime_profile(plan, perm)
+                                for _ in range(reps)])
+    prof = lifetime_profile(plan, perm)
+    emit("memory_profile_warm", us_prof / reps,
+         f"peak_mb={prof.peak / 1e6:.1f};"
+         f"act_peak_mb={prof.act_peak / 1e6:.2f}")
+
+    engine = get_engine(hda)
+    (keep, rec, off), us_pol = timed(lambda: (
+        evaluate_policy(tg, hda, {}, engine=engine),
+        evaluate_policy(tg, hda,
+                        uniform_policy(tg, ActivationPolicy.RECOMPUTE),
+                        engine=engine),
+        evaluate_policy(tg, hda,
+                        uniform_policy(tg, ActivationPolicy.OFFLOAD),
+                        engine=engine)))
+    emit("memory_policy_eval", us_pol / 3,
+         f"keep_peak_mb={keep.peak_mem / 1e6:.1f};"
+         f"off_peak_mb={off.peak_mem / 1e6:.1f};"
+         f"off_lat_vs_keep={off.latency / keep.latency:.3f};"
+         f"rec_lat_vs_keep={rec.latency / keep.latency:.3f};"
+         f"off_dominates_rec="
+         f"{off.latency <= rec.latency and off.peak_mem <= rec.peak_mem}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

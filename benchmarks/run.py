@@ -16,7 +16,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 
 from benchmarks import (bench_checkpointing, bench_dse, bench_engine,
-                        bench_fusion, bench_misc, bench_parallel, common)
+                        bench_fusion, bench_memory, bench_misc,
+                        bench_parallel, common)
 
 
 def main() -> None:
@@ -46,6 +47,8 @@ def main() -> None:
         bench_checkpointing.run_fig11()
     if want("engine"):
         bench_engine.run()
+    if want("memory"):
+        bench_memory.run()
     if want("parallel"):
         bench_parallel.run(fast=args.fast)
     if want("fig12"):

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Perf-regression guard for the benchmarked hot paths (wired into
+scripts/ci.sh).
+
+Compares the freshly written ``BENCH_eval.json`` against the committed
+baseline (snapshotted by ci.sh before the benchmark run overwrites it) and
+fails when a guarded hot-path metric degrades more than the threshold
+(default: >25%, ``BENCH_GUARD_MAX_RATIO``).
+
+Noise handling: entries below the absolute floor (default 1 ms,
+``BENCH_GUARD_FLOOR_US``) are ignored — timer jitter dominates them — and a
+first-pass violation is confirmed by re-running just that benchmark once and
+taking the min of the two measurements, so a single load spike on the CI box
+cannot fail the build.  ``BENCH_GUARD_SKIP=1`` disables the guard entirely.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+#: guarded hot-path entries -> the `benchmarks.run --only` target that
+#: refreshes them (used for the confirmation re-run)
+HOT_PATHS = {
+    "engine_cold": "engine",
+    "engine_delta": "engine",
+    "memory_lifetime_plan": "memory",
+    "memory_policy_eval": "memory",
+    "fig1_fig8_resnet_edgetpu_dse": "fig1_fig8",
+    "fig9_gpt2_fusemax_dse": "fig9",
+    "fig12_ac_ga_pareto": "fig12",
+}
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def us_of(record: dict, name: str) -> float | None:
+    entry = record.get(name)
+    if not isinstance(entry, dict):
+        return None
+    v = entry.get("us_per_call")
+    return float(v) if isinstance(v, (int, float)) else None
+
+
+def rerun(target: str) -> None:
+    """Refresh one benchmark's entry (merge semantics of --json keep the
+    rest of BENCH_eval.json intact)."""
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast", "--json",
+         "--only", target],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        check=False, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_eval.json (pre-run snapshot)")
+    ap.add_argument("--current", required=True,
+                    help="freshly written BENCH_eval.json")
+    ap.add_argument("--max-ratio", type=float,
+                    default=float(os.environ.get("BENCH_GUARD_MAX_RATIO",
+                                                 "1.25")))
+    ap.add_argument("--floor-us", type=float,
+                    default=float(os.environ.get("BENCH_GUARD_FLOOR_US",
+                                                 "1000")))
+    ap.add_argument("--no-rerun", action="store_true",
+                    help="skip the confirmation re-run of violations")
+    args = ap.parse_args()
+
+    if os.environ.get("BENCH_GUARD_SKIP") == "1":
+        print("bench guard skipped (BENCH_GUARD_SKIP=1)")
+        return 0
+    base = load(args.baseline)
+    if not base:
+        print("bench guard: no baseline record — nothing to compare")
+        return 0
+
+    failures: list[str] = []
+    current = load(args.current)
+    for name, target in sorted(HOT_PATHS.items()):
+        b = us_of(base, name)
+        c = us_of(current, name)
+        if b is None or c is None or b < args.floor_us:
+            continue
+        if c <= b * args.max_ratio:
+            continue
+        if not args.no_rerun:          # confirm: min of two measurements
+            rerun(target)
+            current = load(args.current)
+            c2 = us_of(current, name)
+            if c2 is not None:
+                c = min(c, c2)
+        if c > b * args.max_ratio:
+            failures.append(f"{name}: {b:.0f}us -> {c:.0f}us "
+                            f"(x{c / b:.2f} > x{args.max_ratio:.2f})")
+
+    if failures:
+        print("bench guard FAILED (hot-path regression >"
+              f"{(args.max_ratio - 1) * 100:.0f}%):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"bench guard OK ({len(HOT_PATHS)} hot-path entries, "
+          f"threshold x{args.max_ratio:.2f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

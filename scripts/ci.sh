@@ -22,10 +22,18 @@ if [[ "${CI_SKIP_SLOW:-0}" == "1" ]]; then
     python -m pytest "${PYTEST_ARGS[@]}" \
         tests/test_graph.py tests/test_trace.py tests/test_cost_fusion.py \
         tests/test_checkpointing.py tests/test_engine_parity.py \
-        tests/test_parallel.py
+        tests/test_memory.py tests/test_parallel.py tests/test_public_api.py
 else
     python -m pytest "${PYTEST_ARGS[@]}"
 fi
 
-# fast benchmark sweep; BENCH_eval.json records the perf trajectory per PR
+# fast benchmark sweep; BENCH_eval.json records the perf trajectory per PR.
+# Snapshot the committed record first: the regression guard compares the
+# fresh run against it and fails on a >25% hot-path degradation
+# (confirmed by a re-run; see scripts/check_bench_regression.py).
+BASELINE="$(mktemp)"
+trap 'rm -f "$BASELINE"' EXIT
+cp BENCH_eval.json "$BASELINE" 2>/dev/null || true
 python -m benchmarks.run --fast --json
+python scripts/check_bench_regression.py \
+    --baseline "$BASELINE" --current BENCH_eval.json

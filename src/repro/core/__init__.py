@@ -6,9 +6,12 @@ Layers:
   training_transform          — fwd → fwd+bwd+optimizer graph pass
   trace                       — jaxpr → IR ingestion (JAX-native front-end)
   accelerators / cost_model / scheduling — HDA performance & energy model
+  memory                      — unified tensor-lifetime memory model
+                                (categories, interval peaks, KEEP/RECOMPUTE/
+                                OFFLOAD activation policies)
   engine                      — signature-memoizing evaluation engine (hot path)
   fusion                      — constraint-based layer-fusion IP solver
-  checkpointing / nsga2       — activation-checkpointing GA (+MILP baseline)
+  checkpointing / nsga2       — activation-policy GA (+MILP baseline)
   dse                         — hardware design-space sweeps
   remat_policy                — MONET decision → real jax.checkpoint policy
 """
@@ -18,12 +21,15 @@ from .accelerators import (EDGE_TPU_SPACE, FUSEMAX_SPACE, TPU_V5E,
                            datacenter_cluster, edge_cluster, edge_tpu,
                            fusemax, grid, tpu_v5e_like, with_interconnect)
 from .builders import GraphBuilder
-from .checkpointing import (ACResult, ACSolution, activation_set,
-                            apply_checkpointing, evaluate_checkpointing,
-                            ga_checkpointing, knapsack_baseline,
-                            recompute_flops, stored_activation_bytes)
+from .checkpointing import (ACResult, ACSolution, PolicyResult,
+                            PolicySolution, activation_set,
+                            apply_checkpointing, apply_policy,
+                            evaluate_checkpointing, evaluate_policy,
+                            ga_checkpointing, ga_policy, knapsack_baseline,
+                            recompute_flops, stored_activation_bytes,
+                            uniform_policy)
 from .cost_model import (CostModel, NodeCost, collective_wire, comm_cycles,
-                         comm_node_cost)
+                         comm_node_cost, dma_cycles, dma_node_cost)
 from .dse import (DSEPoint, ParallelPoint, compute_resource, pareto_front,
                   spread, sweep, sweep_parallel)
 from .engine import (EvalEngine, GraphSigs, clear_engines, get_engine,
@@ -31,6 +37,10 @@ from .engine import (EvalEngine, GraphSigs, clear_engines, get_engine,
 from .fusion import (FusionConfig, enumerate_candidates, layer_by_layer,
                      manual_fusion, solve_cover, solve_fusion)
 from .graph import GraphError, Node, TensorSpec, WorkloadGraph
+from .memory import (MEM_CATEGORIES, ActivationPolicy, LifetimePlan,
+                     MemProfile, apply_offload, build_lifetime_plan,
+                     lifetime_profile, local_capacity, schedule_priorities,
+                     static_breakdown, tensor_category, tile_working_set)
 from .nsga2 import (NSGA2Result, crowding_distance, fast_non_dominated_sort,
                     nsga2, nsga2_int)
 from .parallel import (ParallelPlan, ParallelResult, ParallelStrategy,

@@ -142,6 +142,24 @@ def comm_cycles(node: Node, hda: HDASpec) -> float:
                1.0)
 
 
+def dma_cycles(node: Node, hda: HDASpec) -> float:
+    """Off-chip DMA cycles of one activation offload/fetch transfer.  The
+    payload (comm-style dims: ``N`` elements × ``E`` bytes/element) streams
+    over the off-chip memory interface on the dedicated ``dma`` resource,
+    overlapping with compute like collectives overlap on ``ici``."""
+    return max(comm_payload(node.dims) / max(hda.offchip_bw, 1e-9), 1.0)
+
+
+def dma_node_cost(cyc: float, inb: float, outb: float,
+                  hda: HDASpec) -> NodeCost:
+    """NodeCost of a DMA transfer: the tensor side (full payload) plus the
+    1-byte residency marker cross the off-chip interface; energy pays DRAM
+    access on the transferred bytes."""
+    offchip = inb + outb
+    cycles = max(cyc, offchip / max(hda.offchip_bw, 1e-9), 1.0)
+    return NodeCost(cycles, offchip, 0.0, 0.0, offchip * hda.offchip_e, "dma")
+
+
 def comm_node_cost(cyc: float, inb: float, outb: float, wire: float,
                    hda: HDASpec) -> NodeCost:
     """NodeCost of a collective: the payload still streams through each
@@ -166,6 +184,10 @@ def compute_cycles(node: Node, core: CoreSpec, tp: int = 1,
         if hda is None:
             raise ValueError("comm node cost needs the HDASpec (interconnect)")
         return comm_cycles(node, hda)
+    if cls == "dma":
+        if hda is None:
+            raise ValueError("dma node cost needs the HDASpec (offchip bw)")
+        return dma_cycles(node, hda)
     if cls in ("conv", "gemm"):
         m = _loop_mapping(node, core)
         spatial = dict(core.spatial)
@@ -284,6 +306,11 @@ class CostModel:
 
     def node_cost(self, node: Node, resident: set = frozenset(),
                   internal_out: set = frozenset()) -> NodeCost:
+        if node.op_class == "dma":
+            return dma_node_cost(dma_cycles(node, self.hda),
+                                 self.in_bytes(node, resident),
+                                 self.out_bytes(node, internal_out),
+                                 self.hda)
         if node.op_class == "comm":
             d = node.dims
             wire, _ = collective_wire(node.op, comm_payload(d),
@@ -341,6 +368,9 @@ class CostModel:
             if nd.op_class == "comm":
                 per_core_cycles["ici"] = (per_core_cycles.get("ici", 0.0)
                                           + comm_cycles(nd, self.hda))
+            elif nd.op_class == "dma":
+                per_core_cycles["dma"] = (per_core_cycles.get("dma", 0.0)
+                                          + dma_cycles(nd, self.hda))
             else:
                 core = self.core_for(nd)
                 per_core_cycles[core.name] = (

@@ -29,6 +29,11 @@ class DSEPoint:
             out[f"{wname}_latency"] = r.latency
             out[f"{wname}_energy"] = r.energy
             out[f"{wname}_peak_mem"] = r.peak_mem
+            # memory-model breakdown (repro.core.memory): weights /
+            # gradients / optimizer-state / activations / ... at the peak
+            for cat, b in r.mem_breakdown.items():
+                out[f"{wname}_mem_{cat}"] = b
+            out[f"{wname}_spill_bytes"] = r.spill_bytes
         return out
 
 
@@ -108,10 +113,16 @@ def sweep_parallel(workloads: dict, make_cluster, chip_counts,
             if strat.chips != n:
                 continue
             results = {}
-            for wname, tg in workloads.items():
-                results[wname] = evaluate_parallel(tg, cluster, strat,
-                                                   fusion=fusion,
-                                                   engine=engine)
+            try:
+                for wname, tg in workloads.items():
+                    results[wname] = evaluate_parallel(tg, cluster, strat,
+                                                       fusion=fusion,
+                                                       engine=engine)
+            except ValueError:
+                # strategy inapplicable to this workload (e.g. pipeline
+                # degree exceeds its forward-node count): skip the cell
+                # instead of aborting the whole sweep
+                continue
             points.append(ParallelPoint(n, strat, results))
     return points
 

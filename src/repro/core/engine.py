@@ -41,8 +41,9 @@ from dataclasses import dataclass, field
 from .accelerators import CoreSpec, HDASpec
 from .cost_model import (CostModel, NodeCost, collective_wire,
                          comm_node_cost, comm_payload, compute_cycles,
-                         node_cost_arith, subgraph_tail)
+                         dma_node_cost, node_cost_arith, subgraph_tail)
 from .graph import Node, WorkloadGraph, dtype_bytes
+from .memory import MEM_CATEGORIES, category_code
 
 # ---------------------------------------------------------------------------
 # signature interning
@@ -101,6 +102,18 @@ def _comm_key(hda: HDASpec) -> int:
     return i
 
 
+def _dma_key(hda: HDASpec) -> int:
+    """Interned id of the facts an activation-offload DMA transfer depends
+    on: off-chip bandwidth + energy only, so chips differing in compute
+    cores or interconnect still share DMA cost entries across a sweep."""
+    k = ("dma", hda.offchip_bw, hda.offchip_e)
+    i = _CORE_KEYS.get(k)
+    if i is None:
+        i = len(_CORE_KEYS)
+        _CORE_KEYS[k] = i
+    return i
+
+
 def tiling_factor(op_class: str, dims: dict) -> int:
     """Outer temporal loop extent used as the intra-core tiling factor
     (shared with the fusion solver's candidate enumeration)."""
@@ -135,6 +148,8 @@ class GraphSigs:
     fp_entry: dict = field(default_factory=dict)  # node -> fingerprint entry
     static: int = 0                # Σ bytes of param/state/input tensors
     static_names: dict = field(default_factory=dict)  # name -> counted bytes
+    cat: dict = field(default_factory=dict)       # tensor -> mem category code
+    static_by_cat: dict = field(default_factory=dict)  # W/S/I static split
     macs_total: int = 0
     _fp: "Fingerprint | None" = None              # lazy schedule fingerprint
 
@@ -143,7 +158,8 @@ class GraphSigs:
                          dict(self.zmask), dict(self.io_bytes),
                          dict(self.tiling), dict(self.node_macs),
                          dict(self.fp_entry), self.static,
-                         dict(self.static_names), self.macs_total, self._fp)
+                         dict(self.static_names), dict(self.cat),
+                         dict(self.static_by_cat), self.macs_total, self._fp)
 
 
 _NO_MASK = ((), ())     # shared empty masks
@@ -164,11 +180,14 @@ def _sign_node(graph: WorkloadGraph, s: GraphSigs, name: str) -> None:
     first: dict[str, int] = {}
     in_pat = tuple(first.setdefault(t, i) for i, t in enumerate(ins))
     out_bytes = tuple(tb[t] for t in outs)
+    for t in outs:
+        # memory category of produced tensors, cached for plan builds
+        s.cat[t] = category_code(tensors[t], nd.kind)
     eb = dtype_bytes(tensors[outs[0]].dtype) if outs else 2
     cls = nd.op_class
-    # comm ops differ in wire/hop formulas per collective, so the concrete
-    # op (not just the class) is part of the signature
-    sig = (nd.op if cls == "comm" else cls,
+    # comm ops differ in wire/hop formulas per collective (and dma ops in
+    # transfer direction), so the concrete op is part of the signature
+    sig = (nd.op if cls in ("comm", "dma") else cls,
            tuple(sorted(nd.dims.items())), nd.flops,
            in_bytes, in_pat, out_bytes, eb)
     i = _sig_id(sig)
@@ -192,9 +211,15 @@ def _sign_node(graph: WorkloadGraph, s: GraphSigs, name: str) -> None:
     s.tiling[name] = tiling_factor(cls, nd.dims)
 
 
+def _static_cat(spec) -> str:
+    """Static-footprint category via the memory model's single rule set."""
+    return MEM_CATEGORIES[category_code(spec, None)]
+
+
 def _count_static(graph: WorkloadGraph, s: GraphSigs, names) -> None:
     tensors = graph.tensors
     seen = s.static_names
+    by_cat = s.static_by_cat
     for t in names:
         if t in seen:
             continue
@@ -202,6 +227,8 @@ def _count_static(graph: WorkloadGraph, s: GraphSigs, names) -> None:
         if spec.is_param or spec.is_state or spec.is_input:
             s.static += spec.bytes
             seen[t] = spec.bytes
+            c = _static_cat(spec)
+            by_cat[c] = by_cat.get(c, 0) + spec.bytes
 
 
 def graph_sigs(graph: WorkloadGraph) -> GraphSigs:
@@ -222,6 +249,9 @@ def graph_sigs(graph: WorkloadGraph) -> GraphSigs:
             if ob is not None and ob != nb:
                 cached.static += nb - ob
                 cached.static_names[t] = nb
+                c = _static_cat(spec)
+                cached.static_by_cat[c] = \
+                    cached.static_by_cat.get(c, 0) + nb - ob
         for name in graph._dirty_nodes:
             _sign_node(graph, cached, name)
         _count_static(graph, cached, graph._dirty_tensors)
@@ -297,6 +327,7 @@ class EvalEngine:
         self._ck_compute = _core_key(self._compute, tp, hda)
         self._ck_simd = _core_key(self._simd, 1, hda)
         self._ck_comm = _comm_key(hda)
+        self._ck_dma = _dma_key(hda)
         self._sg: dict[tuple, NodeCost] = {}      # subgraph signature
         self._sched: OrderedDict = OrderedDict()  # (fingerprint, partition)
         self._sched_cap = 256
@@ -321,11 +352,22 @@ class EvalEngine:
             return self._compute
         return self._simd
 
+    def resource_for_class(self, op_class: str) -> str:
+        """Scheduling resource a node class occupies: collectives on 'ici',
+        offload transfers on 'dma', everything else on its core."""
+        if op_class == "comm":
+            return "ici"
+        if op_class == "dma":
+            return "dma"
+        return self.core_for_class(op_class).name
+
     def ckey_for_class(self, op_class: str) -> int:
         if op_class in ("conv", "gemm"):
             return self._ck_compute
         if op_class == "comm":
             return self._ck_comm
+        if op_class == "dma":
+            return self._ck_dma
         return self._ck_simd
 
     def tp_for_class(self, op_class: str, core: CoreSpec) -> int:
@@ -403,6 +445,10 @@ class BoundEngine:
         for i, t in enumerate(nd.outputs):
             if not imask[i]:
                 outb += tb[t]
+        if nd.op_class == "dma":
+            c = dma_node_cost(cyc, inb, outb, eng.hda)
+            _NODE_COSTS[key] = c
+            return c
         if nd.op_class == "comm":
             d = nd.dims
             wire, _ = collective_wire(nd.op, comm_payload(d),
@@ -450,8 +496,7 @@ class BoundEngine:
                 return cached
             eng.stats["sg_misses"] += 1
             c = self.node_cost(nd, *tri)
-            cname = "ici" if nd.op_class == "comm" \
-                else eng.core_for_class(nd.op_class).name
+            cname = eng.resource_for_class(nd.op_class)
             res = subgraph_tail({cname: self._cycles(
                 eng.ckey_for_class(nd.op_class), tri[0], nd)},
                 c.offchip_bytes, c.local_bytes, 0.0, c.energy_pj, 0,
@@ -497,7 +542,7 @@ class BoundEngine:
         for nd, tri in zip(node_objs, triples):
             c = self.node_cost(nd, *tri)
             cls = nd.op_class
-            cname = "ici" if cls == "comm" else eng.core_for_class(cls).name
+            cname = eng.resource_for_class(cls)
             cyc = self._cycles(eng.ckey_for_class(cls), tri[0], nd)
             per_core[cname] = per_core.get(cname, 0.0) + cyc
             offchip += c.offchip_bytes

@@ -28,6 +28,7 @@ from dataclasses import dataclass
 from .accelerators import HDASpec
 from .engine import graph_sigs
 from .graph import WorkloadGraph
+from .memory import local_capacity, tile_working_set
 
 
 @dataclass
@@ -82,8 +83,8 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
     cfg = cfg or FusionConfig()
     ix = _Idx(g)
     n = len(ix.order)
-    comp = (hda.compute_cores() or list(hda.cores))[0]
-    cap = comp.local.size * comp.count
+    # SRAM ceiling from the unified memory model (repro.core.memory)
+    cap = local_capacity(hda)
 
     # reuse the evaluation engine's per-graph SoA tables (tiling factors and
     # unique per-node I/O bytes) instead of recomputing them here
@@ -100,8 +101,9 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
     for seed in range(n):
         if time.monotonic() > deadline or len(candidates) >= cfg.max_candidates:
             break
-        if ix.node(seed).op_class == "comm":
-            continue    # collectives run on the interconnect: never fused
+        if ix.node(seed).op_class in ("comm", "dma"):
+            continue    # collectives / DMA transfers run on their own
+            # resource (ici / dma): never fused with compute
         seed_desc = ix.desc[seed]
         per_seed = 0
         # DFS over grow decisions
@@ -127,7 +129,7 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
                         frontier.add(v)
             for v in sorted(frontier):
                 nd = ix.node(v)
-                if nd.op_class == "comm":
+                if nd.op_class in ("comm", "dma"):
                     continue
                 c2 = _add_counts(counts, nd)
                 if c2[0] > cfg.max_conv or c2[1] > cfg.max_gemm:
@@ -139,9 +141,9 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
                 if S2 in seen_states:
                     continue
                 if cfg.enforce_memory:
-                    tmin = min([x for x in ts + [t] if x > 1], default=1)
-                    ws = sum(nbytes[i] / max(
-                        1, tmin if tiling[i] > 1 else 1) for i in S2)
+                    # shared tile-working-set constraint (memory model)
+                    ws = tile_working_set((nbytes[i] for i in S2),
+                                          (tiling[i] for i in S2))
                     if ws > cap:
                         continue
                 seen_states.add(S2)

@@ -109,6 +109,10 @@ OP_CLASS = {
     "all_to_all": "comm",
     "send": "comm",
     "recv": "comm",
+    # activation-offload DMA transfers (memory subsystem — repro.core.memory):
+    # costed against off-chip bandwidth on a dedicated 'dma' resource
+    "offload": "dma",
+    "fetch": "dma",
 }
 
 

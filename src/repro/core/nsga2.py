@@ -154,14 +154,17 @@ def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
 def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
               generations: int = 10, seed: int = 0,
               p_crossover: float = 0.9, p_mutation: float | None = None,
-              ) -> NSGA2Result:
+              init: np.ndarray | None = None) -> NSGA2Result:
     """Integer-genome NSGA-II for categorical/mixed search spaces (chip count
     × parallelism strategy × checkpointing budget — see
-    ``repro.core.parallel.ga_parallel``).
+    ``repro.core.parallel.ga_parallel`` — and the ternary activation-policy
+    genome of ``checkpointing.ga_policy``).
 
     ``bounds``: per-gene ``(lo, hi)`` inclusive ranges.
     ``evaluate(genome: np.ndarray[int]) -> tuple`` of objectives (minimize).
-    Uniform crossover + per-gene uniform-resample mutation."""
+    Uniform crossover + per-gene uniform-resample mutation.  ``init``
+    optionally seeds the first rows of the population (e.g. the all-KEEP /
+    all-RECOMPUTE / all-OFFLOAD corner policies)."""
     rng = np.random.default_rng(seed)
     n_var = len(bounds)
     lo = np.array([b[0] for b in bounds], dtype=int)
@@ -169,6 +172,10 @@ def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
     p_mut = p_mutation if p_mutation is not None else 1.0 / max(n_var, 1)
 
     X = rng.integers(lo, hi + 1, size=(pop_size, n_var))
+    if init is not None:
+        seeds = np.clip(np.asarray(init, dtype=int), lo, hi)
+        k = min(len(seeds), pop_size)
+        X[:k] = seeds[:k]
 
     def crossover(a, b):                 # uniform gene swap
         swap = rng.random(n_var) < 0.5

@@ -379,7 +379,6 @@ def _split_stages(g: WorkloadGraph, pp: int) -> list[WorkloadGraph]:
     out: list[WorkloadGraph] = []
     for s in range(pp):
         sg = WorkloadGraph(f"{g.name}.pp{s}of{pp}")
-        names = set(nodes_of[s])
         referenced: set = set()
         for n in nodes_of[s]:
             nd = g.nodes[n]
@@ -529,6 +528,7 @@ class ParallelResult:
     throughput: float            # samples / second
     feasible: bool
     samples_per_iter: int
+    spill_bytes: float = 0.0     # cluster total DMA offload bytes / iteration
     stage_results: list = field(default_factory=list)   # full stage graphs
     body_results: list = field(default_factory=list)    # per-microbatch body
 
@@ -541,7 +541,8 @@ class ParallelResult:
                     peak_mem=self.peak_mem, offchip_bytes=self.offchip_bytes,
                     wire_bytes=self.wire_bytes, throughput=self.throughput,
                     feasible=self.feasible,
-                    samples_per_iter=self.samples_per_iter)
+                    samples_per_iter=self.samples_per_iter,
+                    spill_bytes=self.spill_bytes)
 
 
 def _local_batch(g: WorkloadGraph) -> int:
@@ -614,17 +615,23 @@ def evaluate_parallel(tg: TrainingGraph, cluster: ClusterSpec,
     latency = (m + pp - 1) * t_body + tail
     leak = chip.leak_per_cycle()
     replicas = strategy.data * strategy.tensor
-    energy = offchip = wire = 0.0
+    energy = offchip = wire = spill = 0.0
     for f, b, wf, wb in zip(results, bodies, wire_full, wire_body):
         active = (m - 1) * b.latency + f.latency
         energy += (m - 1) * b.energy + f.energy + (latency - active) * leak
         offchip += (m - 1) * b.offchip_bytes + f.offchip_bytes
         wire += (m - 1) * wb + wf
+        spill += (m - 1) * b.spill_bytes + f.spill_bytes
     energy *= replicas
     offchip *= replicas
     wire *= replicas
-    # 1F1B: stage s holds activations of min(pp - s, m) in-flight microbatches
-    peaks = [r.peak_mem + (min(pp - s, m) - 1) * r.activation_bytes
+    spill *= replicas
+    # 1F1B: stage s holds the activations of min(pp - s, m) in-flight
+    # microbatches.  The per-copy charge is the *lifetime-based* peak
+    # activation residency from the unified memory model (act_peak), not the
+    # Σ-of-𝒜 heuristic: recomputed/offloaded activations never reach the
+    # residency peak, so policy rewrites now shrink the parallel footprint.
+    peaks = [r.peak_mem + (min(pp - s, m) - 1) * r.act_peak
              for s, r in enumerate(results)]
     peak = max(peaks)
     feasible = (cluster.mem_capacity <= 0) or (peak <= cluster.mem_capacity)
@@ -635,8 +642,8 @@ def evaluate_parallel(tg: TrainingGraph, cluster: ClusterSpec,
         latency=latency, energy=energy, peak_mem=peak,
         offchip_bytes=offchip, wire_bytes=wire,
         throughput=samples / max(seconds, 1e-30), feasible=feasible,
-        samples_per_iter=samples, stage_results=results,
-        body_results=bodies)
+        samples_per_iter=samples, spill_bytes=spill,
+        stage_results=results, body_results=bodies)
 
 
 # ---------------------------------------------------------------------------
@@ -682,7 +689,14 @@ def ga_parallel(tg: TrainingGraph, make_cluster, chip_counts: list,
             kept, _ = knapsack_baseline(tg, int(total_act * frac))
             work = TrainingGraph(apply_checkpointing(tg, set(kept)),
                                  tg.param_grads, list(kept), tg.optimizer)
-        r = evaluate_parallel(work, cluster, strat, fusion=fusion)
+        try:
+            r = evaluate_parallel(work, cluster, strat, fusion=fusion)
+        except ValueError:
+            # inapplicable genome (e.g. pipeline degree > forward nodes):
+            # heavily penalized instead of aborting the GA
+            out = (0.0, float("inf"), float("inf"))
+            cache[key] = out
+            return out
         penalty = 1.0 if r.feasible else 1e3
         out = (-r.throughput * (1.0 / penalty), r.energy * penalty,
                r.peak_mem)

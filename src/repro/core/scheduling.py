@@ -20,6 +20,8 @@ from .accelerators import HDASpec
 from .cost_model import CostModel
 from .engine import get_engine
 from .graph import GraphError, WorkloadGraph
+from .memory import (MEM_CATEGORIES, build_lifetime_plan, lifetime_profile,
+                     schedule_priorities)
 
 
 @dataclass
@@ -33,16 +35,26 @@ class ScheduleResult:
     n_subgraphs: int = 0
     total_macs: int = 0
     hda_name: str = ""
+    # unified memory model (repro.core.memory — see docs/memory.md)
+    mem_breakdown: dict = field(default_factory=dict)  # category -> bytes @peak
+    act_peak: float = 0.0          # peak live activation-category bytes
+    spill_bytes: float = 0.0       # DMA offload traffic per iteration (bytes)
+    spill_cycles: float = 0.0      # busy cycles on the 'dma' resource
 
     @property
     def mac_utilization(self) -> float:
         return self.total_macs / max(self.latency, 1.0)
 
     def as_row(self) -> dict:
-        return dict(latency=self.latency, energy=self.energy,
-                    offchip_bytes=self.offchip_bytes, peak_mem=self.peak_mem,
-                    activation_bytes=self.activation_bytes,
-                    n_subgraphs=self.n_subgraphs, hda=self.hda_name)
+        row = dict(latency=self.latency, energy=self.energy,
+                   offchip_bytes=self.offchip_bytes, peak_mem=self.peak_mem,
+                   activation_bytes=self.activation_bytes,
+                   n_subgraphs=self.n_subgraphs, hda=self.hda_name,
+                   spill_bytes=self.spill_bytes,
+                   spill_cycles=self.spill_cycles)
+        for cat in MEM_CATEGORIES:
+            row[f"mem_{cat}"] = self.mem_breakdown.get(cat, 0)
+        return row
 
 
 def quotient_dag(graph: WorkloadGraph, partition: list) -> tuple[dict, dict]:
@@ -88,17 +100,16 @@ def quotient_dag(graph: WorkloadGraph, partition: list) -> tuple[dict, dict]:
 
 class _Plan:
     """HDA-independent schedule structure for one (graph, partition) pair:
-    quotient adjacency, priorities, liveness prep and static byte totals.
-    Cached by content key, so a DSE sweep evaluating the same workload on
-    hundreds of architectures builds it exactly once."""
+    quotient adjacency, priorities and the lifetime arrays of the unified
+    memory model (``repro.core.memory.LifetimePlan``).  Cached by
+    ``(fingerprint, partition)``, so a DSE sweep evaluating the same
+    workload on hundreds of architectures builds it exactly once."""
 
-    __slots__ = ("n", "succ", "indeg", "prio", "static", "act_bytes",
-                 "total_macs", "prod_sg", "prod_bytes", "cons_flat",
-                 "cons_split")
+    __slots__ = ("n", "succ", "indeg", "prio", "act_bytes", "total_macs",
+                 "mem")
 
     def __init__(self, graph: WorkloadGraph, partition: list,
                  quotient=None, sigs=None):
-        import numpy as np
         if quotient is None:
             _, qsucc = quotient_dag(graph, partition)
             succ = [tuple(qsucc.get(i, ())) for i in range(len(partition))]
@@ -110,51 +121,20 @@ class _Plan:
             for b in bs:
                 indeg[b] += 1
         topo_idx = {nm: i for i, nm in enumerate(graph.topo_order())}
-        nodes = graph.nodes
-        tensors = graph.tensors
-        # liveness prep: producing subgraph + consuming subgraphs per tensor
-        tens_prod: dict[str, int] = {}
-        tens_cons: dict[str, list] = {}
-        for i, sg in enumerate(partition):
-            for nm in sg:
-                nd = nodes[nm]
-                for t in nd.inputs:
-                    tens_cons.setdefault(t, []).append(i)
-                for t in nd.outputs:
-                    tens_prod[t] = i
         self.n = n
         self.succ = succ
         self.indeg = indeg
-        gi = topo_idx.__getitem__
-        self.prio = [gi(sg[0]) if len(sg) == 1 else min(map(gi, sg))
-                     for sg in partition]
         if sigs is not None:
-            self.static = sigs.static
             self.total_macs = sigs.macs_total
-            tb = sigs.tb
-            nbytes = [tb[t] for t in tens_prod]
         else:
-            self.static = sum(t.bytes for t in tensors.values()
-                              if t.is_param or t.is_state or t.is_input)
-            self.total_macs = sum(nd.macs for nd in nodes.values())
-            nbytes = [tensors[t].bytes for t in tens_prod]
+            self.total_macs = sum(nd.macs for nd in graph.nodes.values())
         self.act_bytes = graph.activation_bytes()
-        # SoA layout: produced-tensor bytes, producing subgraph, and the
-        # flattened consumer lists (split points for np.maximum.reduceat)
-        self.prod_sg = np.fromiter(tens_prod.values(), dtype=np.int64,
-                                   count=len(tens_prod))
-        self.prod_bytes = np.asarray(nbytes, dtype=np.int64)
-        cons_flat: list = []
-        cons_split = [0]
-        for t, pi in tens_prod.items():
-            cs = tens_cons.get(t)
-            if cs:
-                cons_flat.extend(cs)
-            else:
-                cons_flat.append(pi)     # no consumers: freed at prod step
-            cons_split.append(len(cons_flat))
-        self.cons_flat = np.asarray(cons_flat, dtype=np.int64)
-        self.cons_split = np.asarray(cons_split[:-1], dtype=np.int64)
+        # lifetime arrays (producing subgraph, bytes, category, consumers)
+        # come from the shared memory model — single source of truth
+        self.mem = build_lifetime_plan(graph, partition, sigs)
+        self.prio = schedule_priorities(
+            graph, partition, topo_idx,
+            has_fetch=bool(self.mem.fetch_idx.size))
 
 
 _PLANS: OrderedDict = OrderedDict()
@@ -195,12 +175,14 @@ def schedule(graph: WorkloadGraph, hda: HDASpec, partition: list | None = None,
         memo_key = (bound.fingerprint(), tuple(partition))
         hit = eng.sched_get(memo_key)
         if hit is not None:
-            return replace(hit, per_core_busy=dict(hit.per_core_busy))
+            return replace(hit, per_core_busy=dict(hit.per_core_busy),
+                           mem_breakdown=dict(hit.mem_breakdown))
         plan = _plan_for(graph, partition, memo_key, quotient, bound.sigs)
         costs = [bound.subgraph_cost(sg) for sg in partition]
         res = _assemble_fast(hda, plan, costs)
         eng.sched_put(memo_key, res)
-        return replace(res, per_core_busy=dict(res.per_core_busy))
+        return replace(res, per_core_busy=dict(res.per_core_busy),
+                       mem_breakdown=dict(res.mem_breakdown))
 
     cm = CostModel(graph, hda, tensor_parallel=tensor_parallel)
     sg_of, succ = quotient_dag(graph, partition)
@@ -248,37 +230,30 @@ def _assemble_fast(hda: HDASpec, plan: _Plan, costs: list) -> ScheduleResult:
     if scheduled != n:
         raise GraphError("scheduler deadlock (cycle?)")
 
-    # memory liveness (topo-step granularity), vectorized over the plan's
-    # SoA tensor arrays.  Integer byte arithmetic — exact, so bit-for-bit
-    # equal to the reference's event-dict scan.
+    # memory liveness through the unified lifetime model (topo-step
+    # granularity, integer byte arithmetic — exact, so bit-for-bit equal to
+    # the reference path, which calls the same kernel).
     import numpy as np
     order = sorted(range(n), key=finish.__getitem__)
     perm = np.empty(n, dtype=np.int64)
     perm[np.asarray(order, dtype=np.int64)] = np.arange(n, dtype=np.int64)
-    if plan.prod_sg.size:
-        s_arr = perm[plan.prod_sg]
-        # last consumer in finish order (matches the reference's
-        # last-assignment-wins over the finish-ordered scan)
-        e_arr = np.maximum.reduceat(perm[plan.cons_flat], plan.cons_split)
-        deltas = np.zeros(n + 1, dtype=np.int64)
-        np.add.at(deltas, s_arr, plan.prod_bytes)
-        np.add.at(deltas, e_arr + 1, -plan.prod_bytes)
-        peak = max(plan.static,
-                   plan.static + int(np.cumsum(deltas).max()))
-    else:
-        peak = plan.static
+    prof = lifetime_profile(plan.mem, perm)
 
     energy = sum(c.energy_pj for c in costs) + makespan * hda.leak_per_cycle()
     return ScheduleResult(
         latency=makespan,
         energy=energy,
         offchip_bytes=sum(c.offchip_bytes for c in costs),
-        peak_mem=peak,
+        peak_mem=prof.peak,
         activation_bytes=plan.act_bytes,
         per_core_busy=busy,
         n_subgraphs=n,
         total_macs=plan.total_macs,
         hda_name=hda.name,
+        mem_breakdown=prof.breakdown,
+        act_peak=prof.act_peak,
+        spill_bytes=plan.mem.spill_bytes,
+        spill_cycles=busy.get("dma", 0.0),
     )
 
 
@@ -290,9 +265,9 @@ def _assemble(graph: WorkloadGraph, hda: HDASpec, partition: list,
         for b in bs:
             preds[b].add(a)
     remaining = {i: len(preds[i]) for i in range(len(partition))}
-    # priority = topo index of first node (stable, dependency-friendly)
-    topo_idx = {n: i for i, n in enumerate(graph.topo_order())}
-    prio = {i: min(topo_idx[n] for n in sg) for i, sg in enumerate(partition)}
+    # priority = topo index of first node (stable, dependency-friendly);
+    # just-in-time DMA fetches inherit their consumers' priority
+    prio = dict(enumerate(schedule_priorities(graph, partition)))
 
     core_free: dict[str, float] = defaultdict(float)
     finish: dict[int, float] = {}
@@ -322,36 +297,28 @@ def _assemble(graph: WorkloadGraph, hda: HDASpec, partition: list,
         raise GraphError("scheduler deadlock (cycle?)")
 
     # ---- memory liveness (topo-step granularity) --------------------------
-    order = sorted(range(len(partition)), key=finish.get)
-    last_use: dict[str, int] = {}
-    prod_step: dict[str, int] = {}
-    for step, i in enumerate(order):
-        for n in partition[i]:
-            nd = graph.nodes[n]
-            for t in nd.inputs:
-                last_use[t] = step
-            for t in nd.outputs:
-                prod_step[t] = step
-    static = sum(t.bytes for t in graph.tensors.values()
-                 if t.is_param or t.is_state or t.is_input)
-    events = defaultdict(float)
-    for t, s in prod_step.items():
-        events[s] += graph.tensors[t].bytes
-        events[last_use.get(t, s) + 1] -= graph.tensors[t].bytes
-    live, peak = static, static
-    for s in sorted(events):
-        live += events[s]
-        peak = max(peak, live)
+    # through the unified lifetime model — same kernel as the engine path
+    import numpy as np
+    n = len(partition)
+    order = sorted(range(n), key=finish.get)
+    perm = np.empty(n, dtype=np.int64)
+    perm[np.asarray(order, dtype=np.int64)] = np.arange(n, dtype=np.int64)
+    mem = build_lifetime_plan(graph, partition)
+    prof = lifetime_profile(mem, perm)
 
     energy = sum(c.energy_pj for c in costs) + makespan * hda.leak_per_cycle()
     return ScheduleResult(
         latency=makespan,
         energy=energy,
         offchip_bytes=sum(c.offchip_bytes for c in costs),
-        peak_mem=peak,
+        peak_mem=prof.peak,
         activation_bytes=graph.activation_bytes(),
         per_core_busy=dict(busy),
         n_subgraphs=len(partition),
         total_macs=sum(graph.nodes[n].macs for n in graph.nodes),
         hda_name=hda.name,
+        mem_breakdown=prof.breakdown,
+        act_peak=prof.act_peak,
+        spill_bytes=mem.spill_bytes,
+        spill_cycles=busy.get("dma", 0.0),
     )

@@ -26,6 +26,11 @@ def assert_equal_results(a, b):
     assert a.n_subgraphs == b.n_subgraphs
     assert a.total_macs == b.total_macs
     assert a.hda_name == b.hda_name
+    # unified memory-model fields (repro.core.memory)
+    assert a.mem_breakdown == b.mem_breakdown
+    assert a.act_peak == b.act_peak
+    assert a.spill_bytes == b.spill_bytes
+    assert a.spill_cycles == b.spill_cycles
 
 
 @pytest.fixture(scope="module")

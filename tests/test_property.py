@@ -12,10 +12,12 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (FusionConfig, GraphBuilder, build_training_graph,
-                        edge_tpu, knapsack_baseline, quotient_dag, schedule,
-                        solve_fusion, stored_activation_bytes,
+from repro.core import (ActivationPolicy, FusionConfig, GraphBuilder,
+                        apply_policy, build_training_graph, edge_tpu,
+                        knapsack_baseline, manual_fusion, quotient_dag,
+                        schedule, solve_fusion, stored_activation_bytes,
                         activation_set)
+from repro.core.fusion import repair_partition
 from repro.core.nsga2 import crowding_distance, fast_non_dominated_sort
 from repro.distributed.sharding import prune_pspec
 from jax.sharding import PartitionSpec as P
@@ -89,6 +91,44 @@ def test_knapsack_budget_property(widths, frac):
     budget = int(total * frac)
     kept, _ = knapsack_baseline(tg, budget)
     assert stored_activation_bytes(tg, kept) <= budget + 4096
+
+
+@settings(max_examples=15, deadline=None)
+@given(widths=widths_st, batch=st.sampled_from([1, 4]),
+       policy_seed=st.integers(0, 9))
+def test_allocator_peak_bounds_and_offload_parity(widths, batch, policy_seed):
+    """Unified memory-model invariants on random workloads × random ternary
+    policies: the allocator peak is at least the liveness lower bound
+    (static + the largest live tensor) and at most the total byte volume,
+    and offload-augmented schedules stay bit-for-bit engine-vs-reference
+    identical."""
+    tg = build_training_graph(random_mlp(widths, batch))
+    rng = np.random.default_rng(policy_seed)
+    acts = activation_set(tg)
+    pol = {a: ActivationPolicy(int(rng.integers(0, 3))) for a in acts}
+    g2 = apply_policy(tg, pol)
+    hda = edge_tpu()
+    part, quotient = repair_partition(g2, manual_fusion(g2),
+                                      return_quotient=True)
+    res = schedule(g2, hda, part, quotient=quotient)
+    ref = schedule(g2, hda, part, use_engine=False)
+    # bit-for-bit parity of every memory-model field
+    assert res.peak_mem == ref.peak_mem
+    assert res.latency == ref.latency
+    assert res.energy == ref.energy
+    assert res.mem_breakdown == ref.mem_breakdown
+    assert res.act_peak == ref.act_peak
+    assert res.spill_bytes == ref.spill_bytes
+    assert res.spill_cycles == ref.spill_cycles
+    # allocator peak bounds
+    static = sum(t.bytes for t in g2.tensors.values()
+                 if t.is_param or t.is_state or t.is_input)
+    produced = [g2.tensors[t].bytes for t in g2.producer]
+    # every produced tensor is live at (at least) one step alongside the
+    # static set, so the largest one lower-bounds the peak
+    assert res.peak_mem >= static + (max(produced) if produced else 0)
+    assert res.peak_mem <= static + sum(produced)
+    assert sum(res.mem_breakdown.values()) == res.peak_mem
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,0 +1,67 @@
+"""Pin the public surface of ``repro.core`` so refactors cannot silently
+drop exported names (ISSUE 4 satellite).  New exports are fine — extend
+``EXPECTED`` — but removing any listed name is a breaking change that must
+fail loudly here instead of in downstream examples."""
+
+import repro.core as core
+
+EXPECTED = {
+    # graph IR + front-ends
+    "WorkloadGraph", "Node", "TensorSpec", "GraphError", "GraphBuilder",
+    "trace_fn", "trace_model",
+    "gpt2_graph", "mlp_graph", "resnet18_graph",
+    # training transform
+    "TrainingGraph", "build_training_graph", "OPTIMIZERS",
+    # accelerators + clusters
+    "HDASpec", "CoreSpec", "MemLevel", "ClusterSpec",
+    "edge_tpu", "fusemax", "tpu_v5e_like", "grid",
+    "edge_cluster", "datacenter_cluster", "with_interconnect",
+    "EDGE_TPU_SPACE", "FUSEMAX_SPACE", "TPU_V5E",
+    # cost model + scheduling
+    "CostModel", "NodeCost", "collective_wire", "comm_cycles",
+    "comm_node_cost", "dma_cycles", "dma_node_cost",
+    "ScheduleResult", "schedule", "quotient_dag",
+    # unified memory subsystem
+    "ActivationPolicy", "MEM_CATEGORIES", "LifetimePlan", "MemProfile",
+    "apply_offload", "build_lifetime_plan", "lifetime_profile",
+    "local_capacity", "schedule_priorities", "static_breakdown",
+    "tensor_category", "tile_working_set",
+    # evaluation engine
+    "EvalEngine", "GraphSigs", "get_engine", "clear_engines", "graph_sigs",
+    # fusion
+    "FusionConfig", "enumerate_candidates", "layer_by_layer",
+    "manual_fusion", "solve_cover", "solve_fusion",
+    # checkpointing + policies + NSGA-II
+    "ACResult", "ACSolution", "PolicyResult", "PolicySolution",
+    "activation_set", "apply_checkpointing", "apply_policy",
+    "evaluate_checkpointing", "evaluate_policy", "ga_checkpointing",
+    "ga_policy", "knapsack_baseline", "recompute_flops",
+    "stored_activation_bytes", "uniform_policy",
+    "NSGA2Result", "crowding_distance", "fast_non_dominated_sort",
+    "nsga2", "nsga2_int",
+    # parallel training
+    "ParallelPlan", "ParallelResult", "ParallelStrategy",
+    "evaluate_parallel", "ga_parallel", "graph_wire_bytes", "parallelize",
+    "strategy_space",
+    # DSE
+    "DSEPoint", "ParallelPoint", "compute_resource", "pareto_front",
+    "spread", "sweep", "sweep_parallel",
+    # remat policies
+    "keepset_to_policy", "policy_from_keep", "resolve_remat",
+}
+
+
+def test_public_surface_is_pinned():
+    exported = set(core.__all__)
+    missing = EXPECTED - exported
+    assert not missing, f"repro.core dropped public names: {sorted(missing)}"
+
+
+def test_all_names_resolve():
+    for name in core.__all__:
+        assert getattr(core, name, None) is not None, name
+
+
+def test_expected_names_importable():
+    for name in sorted(EXPECTED):
+        assert hasattr(core, name), name
