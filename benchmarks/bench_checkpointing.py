@@ -4,7 +4,6 @@ Adam, batch 1, 224×224)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import (FusionConfig, activation_set, build_training_graph,
                         edge_tpu, evaluate_checkpointing, ga_checkpointing,

@@ -1,0 +1,62 @@
+"""Fusion-configuration search benchmark (src/repro/core/fusion_search.py).
+
+Times the paper-study search on the ResNet-18 training graph and reports
+how hard the evaluation engine is working for it:
+
+* ``fusion_search_resnet``   — full boundary-genome NSGA-II search (small
+  CI budget), us per evaluated genome;
+* ``fusion_search_repeat``   — re-evaluation of the searched-best partition
+  on a warm engine (ScheduleResult memo hit, zero fresh node signings);
+* ``fusion_search_greedy``   — the greedy SRAM-feasible seed partition
+  alone (the non-search baseline a sweep would use via
+  ``dse.sweep(fusion="greedy")``).
+"""
+
+from __future__ import annotations
+
+from repro.core import (FusionSearchConfig, build_training_graph, edge_tpu,
+                        evaluate_partition, greedy_sram_partition,
+                        resnet18_graph, search_fusion)
+from repro.core.engine import EvalEngine, sign_count
+from repro.core.scheduling import clear_plan_cache, plan_cache_stats
+
+from .common import emit, timed
+
+
+def run(pop: int = 12, gens: int = 6):
+    hda = edge_tpu()
+    tg = build_training_graph(resnet18_graph(1, 32), "adam")
+    g = tg.graph
+
+    eng = EvalEngine(hda)
+    cfg = FusionSearchConfig(pop_size=pop, generations=gens, seed=0)
+    clear_plan_cache()         # time cold plan builds, not process leftovers
+    res, us = timed(search_fusion, g, hda, cfg, engine=eng)
+    evals = max(res.stats["genome_evals"], 1)
+    plans = plan_cache_stats()
+    emit("fusion_search_resnet", us / evals,
+         f"evals={evals};unique={res.stats['unique_partitions']};"
+         f"plan_builds={plans['misses']};front={len(res.pareto)};"
+         f"best_vs_base={res.best.latency / res.baseline.latency:.3f};"
+         f"dominates={res.best_dominates_baseline}")
+
+    s0, p0 = sign_count(), plan_cache_stats()
+    _, us_rep = timed(evaluate_partition, g, hda, res.best.partition,
+                      cfg.objectives, eng)
+    p1 = plan_cache_stats()
+    emit("fusion_search_repeat", us_rep,
+         f"fresh_signings={sign_count() - s0};"
+         f"plan_hits={p1['hits'] - p0['hits']};"
+         f"search/repeat={us / max(us_rep, 1e-9):.0f}x")
+
+    part, us_greedy = timed(greedy_sram_partition, g, hda)
+    emit("fusion_search_greedy", us_greedy,
+         f"groups={len(part)};of={len(g)}nodes")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ import os
 import subprocess
 import sys
 
-from repro.configs import SHAPES, get_config, cell_status, ARCH_IDS
+from repro.configs import SHAPES, get_config
 from repro.core.accelerators import TPU_V5E
 
 from .common import ART, dump, emit

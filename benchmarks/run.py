@@ -16,8 +16,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 
 from benchmarks import (bench_checkpointing, bench_dse, bench_engine,
-                        bench_fusion, bench_memory, bench_misc,
-                        bench_parallel, common)
+                        bench_fusion, bench_fusion_search, bench_memory,
+                        bench_misc, bench_parallel, common)
 
 
 def main() -> None:
@@ -43,6 +43,9 @@ def main() -> None:
         bench_dse.run_fig9(sample=24 if args.fast else 60)
     if want("fig10"):
         bench_fusion.run(time_limit=3.0 if args.fast else 8.0)
+    if want("fusion_search"):
+        bench_fusion_search.run(pop=8 if args.fast else 16,
+                                gens=4 if args.fast else 10)
     if want("fig11"):
         bench_checkpointing.run_fig11()
     if want("engine"):

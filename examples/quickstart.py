@@ -10,7 +10,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (FusionConfig, build_training_graph, edge_tpu,
-                        ga_checkpointing, layer_by_layer, resnet18_graph,
+                        ga_checkpointing, resnet18_graph,
                         schedule, solve_fusion)
 
 

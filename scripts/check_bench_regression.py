@@ -12,6 +12,14 @@ Noise handling: entries below the absolute floor (default 1 ms,
 first-pass violation is confirmed by re-running just that benchmark once and
 taking the min of the two measurements, so a single load spike on the CI box
 cannot fail the build.  ``BENCH_GUARD_SKIP=1`` disables the guard entirely.
+
+Outcome reporting (for CI): a machine-readable summary is always written to
+``--summary-json`` (default ``artifacts/bench_guard.json``), and the exit
+code distinguishes the cases — ``0`` guard passed (or skipped), ``1``
+hot-path regression, ``3`` no baseline record (fresh clone / first run;
+not ``2``, which argparse reserves for usage errors).  ci.sh and the
+GitHub workflow treat ``3`` as warn-not-fail instead of silently passing
+a run that compared nothing.
 """
 
 from __future__ import annotations
@@ -32,6 +40,7 @@ HOT_PATHS = {
     "fig1_fig8_resnet_edgetpu_dse": "fig1_fig8",
     "fig9_gpt2_fusemax_dse": "fig9",
     "fig12_ac_ga_pareto": "fig12",
+    "fusion_search_resnet": "fusion_search",
 }
 
 
@@ -75,44 +84,65 @@ def main() -> int:
                                                  "1000")))
     ap.add_argument("--no-rerun", action="store_true",
                     help="skip the confirmation re-run of violations")
+    ap.add_argument("--summary-json",
+                    default=os.path.join("artifacts", "bench_guard.json"),
+                    help="machine-readable outcome record for CI "
+                         "('' disables)")
     args = ap.parse_args()
 
+    summary: dict = dict(status="ok", max_ratio=args.max_ratio,
+                         floor_us=args.floor_us, checked=[], failures=[])
+
+    def finish(status: str, code: int, message: str) -> int:
+        summary["status"] = status
+        summary["exit_code"] = code
+        print(message)
+        for f in summary["failures"]:
+            print(f"  - {f['name']}: {f['baseline_us']:.0f}us -> "
+                  f"{f['current_us']:.0f}us (x{f['ratio']:.2f} > "
+                  f"x{args.max_ratio:.2f})")
+        if args.summary_json:
+            os.makedirs(os.path.dirname(args.summary_json) or ".",
+                        exist_ok=True)
+            with open(args.summary_json, "w") as f:
+                json.dump(summary, f, indent=1)
+        return code
+
     if os.environ.get("BENCH_GUARD_SKIP") == "1":
-        print("bench guard skipped (BENCH_GUARD_SKIP=1)")
-        return 0
+        return finish("skipped", 0, "bench guard skipped (BENCH_GUARD_SKIP=1)")
     base = load(args.baseline)
     if not base:
-        print("bench guard: no baseline record — nothing to compare")
-        return 0
+        # distinct exit code so CI can warn-not-fail on a fresh clone
+        # instead of treating "compared nothing" as a pass
+        return finish("no_baseline", 3,
+                      "bench guard: no baseline record (fresh clone?) — "
+                      "nothing to compare [exit 3]")
 
-    failures: list[str] = []
     current = load(args.current)
     for name, target in sorted(HOT_PATHS.items()):
         b = us_of(base, name)
         c = us_of(current, name)
         if b is None or c is None or b < args.floor_us:
             continue
-        if c <= b * args.max_ratio:
-            continue
-        if not args.no_rerun:          # confirm: min of two measurements
-            rerun(target)
+        if c > b * args.max_ratio and not args.no_rerun:
+            rerun(target)              # confirm: min of two measurements
             current = load(args.current)
             c2 = us_of(current, name)
             if c2 is not None:
                 c = min(c, c2)
+        entry = dict(name=name, baseline_us=b, current_us=c, ratio=c / b)
+        summary["checked"].append(entry)
         if c > b * args.max_ratio:
-            failures.append(f"{name}: {b:.0f}us -> {c:.0f}us "
-                            f"(x{c / b:.2f} > x{args.max_ratio:.2f})")
+            summary["failures"].append(entry)
 
-    if failures:
-        print("bench guard FAILED (hot-path regression >"
-              f"{(args.max_ratio - 1) * 100:.0f}%):")
-        for f in failures:
-            print(f"  - {f}")
-        return 1
-    print(f"bench guard OK ({len(HOT_PATHS)} hot-path entries, "
-          f"threshold x{args.max_ratio:.2f})")
-    return 0
+    if summary["failures"]:
+        return finish("failed", 1,
+                      "bench guard FAILED (hot-path regression >"
+                      f"{(args.max_ratio - 1) * 100:.0f}%):")
+    return finish("ok", 0,
+                  f"bench guard OK ({len(summary['checked'])} of "
+                  f"{len(HOT_PATHS)} hot-path entries compared, "
+                  f"threshold x{args.max_ratio:.2f})")
 
 
 if __name__ == "__main__":

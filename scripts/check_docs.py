@@ -29,6 +29,8 @@ def check_markdown(md: Path, errors: list) -> None:
     for target in LINK_RE.findall(text):
         if target.startswith(("http://", "https://", "mailto:", "#")):
             continue
+        if "actions/workflows/" in target:
+            continue   # GitHub-UI path (CI badge/link), not a repo file
         path = target.split("#", 1)[0]
         if not path:
             continue

@@ -8,8 +8,7 @@ be a compact ``jax.lax.scan`` even for heterogeneous (hybrid) archs.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import NamedTuple
 
 

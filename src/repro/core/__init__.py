@@ -11,6 +11,7 @@ Layers:
                                 OFFLOAD activation policies)
   engine                      — signature-memoizing evaluation engine (hot path)
   fusion                      — constraint-based layer-fusion IP solver
+  fusion_search               — boundary-genome NSGA-II fusion-config search
   checkpointing / nsga2       — activation-policy GA (+MILP baseline)
   dse                         — hardware design-space sweeps
   remat_policy                — MONET decision → real jax.checkpoint policy
@@ -34,8 +35,14 @@ from .dse import (DSEPoint, ParallelPoint, compute_resource, pareto_front,
                   spread, sweep, sweep_parallel)
 from .engine import (EvalEngine, GraphSigs, clear_engines, get_engine,
                      graph_sigs)
-from .fusion import (FusionConfig, enumerate_candidates, layer_by_layer,
-                     manual_fusion, solve_cover, solve_fusion)
+from .fusion import (FusionConfig, GroupChecker, enumerate_candidates,
+                     greedy_sram_partition, layer_by_layer, manual_fusion,
+                     solve_cover, solve_fusion)
+from .fusion_search import (FusionCandidate, FusionSearchConfig,
+                            FusionSearchResult, best_partition, decode_genome,
+                            encode_partition, evaluate_partition,
+                            exhaustive_fusion, fusion_partition,
+                            search_fusion, search_fusion_policy)
 from .graph import GraphError, Node, TensorSpec, WorkloadGraph
 from .memory import (MEM_CATEGORIES, ActivationPolicy, LifetimePlan,
                      MemProfile, apply_offload, build_lifetime_plan,

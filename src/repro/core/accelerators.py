@@ -15,7 +15,7 @@ Pareto structure of the paper's Figs. 1, 8, 9.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 # -- technology constants (pJ) ---------------------------------------------
 E_MAC = 0.8                 # one bf16 MAC incl. register-file operand access

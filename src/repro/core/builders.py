@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 
-from .graph import Node, TensorSpec, WorkloadGraph, conv_flops, gemm_flops
+from .graph import Node, WorkloadGraph, conv_flops, gemm_flops
 
 
 class GraphBuilder:

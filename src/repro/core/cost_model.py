@@ -49,9 +49,6 @@ def _loop_mapping(node: Node, core: CoreSpec) -> dict:
     d = node.dims
     cls = node.op_class
     if cls == "conv":
-        full = dict(K=d["K"], C=d["C"],
-                    M=d["B"] * d["OY"] * d["OX"], N=d["K"],
-                    OY=d["B"] * d["OY"] * d["OX"], rest=d["FY"] * d["FX"])
         if core.dataflow == "ws":
             # spatial K (lanes) × C (simd); temporal B·OY·OX·FY·FX
             return {"K": d["K"], "C": d["C"],

@@ -6,15 +6,15 @@ graphs through the scheduler, and extracts Pareto fronts.
 
 from __future__ import annotations
 
-import itertools
 import random
 from dataclasses import dataclass
 
-from .accelerators import HDASpec, edge_tpu, fusemax, grid
+from .accelerators import HDASpec, grid
 from .engine import get_engine
-from .fusion import manual_fusion
+from .fusion_search import FusionSearchConfig, fusion_partition
 from .graph import WorkloadGraph
-from .scheduling import ScheduleResult, schedule
+from .memory import local_capacity
+from .scheduling import schedule
 
 
 @dataclass
@@ -37,15 +37,45 @@ class DSEPoint:
         return out
 
 
+def _partition_for(g: WorkloadGraph, hda: HDASpec, wname: str, fusion: str,
+                   cache: dict, engine, fusion_cfg=None):
+    """(partition, quotient) of ``g`` for one sweep point through the
+    shared dispatcher (``fusion_search.fusion_partition``), memoized on
+    exactly the HDA facts the mode depends on: ``manual`` is
+    HDA-independent, ``greedy`` sees the architecture only through the
+    SRAM ceiling (and the shared tiling tables), ``solver`` / ``search``
+    depend on the full spec."""
+    if fusion in (None, "none"):
+        return None, None
+    if fusion == "manual":
+        key = (wname,)
+    elif fusion == "greedy":
+        key = (wname, local_capacity(hda))
+    else:
+        key = (wname, hda)
+    hit = cache.get(key)
+    if hit is None:
+        hit = fusion_partition(
+            g, hda, fusion, fusion_cfg, engine,
+            search_default=FusionSearchConfig(pop_size=12, generations=6))
+        cache[key] = hit
+    return hit
+
+
 def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
-          seed: int = 0, fusion: str = "manual") -> list[DSEPoint]:
+          seed: int = 0, fusion: str = "manual",
+          fusion_cfg=None) -> list[DSEPoint]:
     """Evaluate every (or ``sample`` random) config in ``space`` on each
-    workload graph.  ``workloads``: name → WorkloadGraph."""
+    workload graph.  ``workloads``: name → WorkloadGraph.  ``fusion``
+    selects the partition per point: ``none`` / ``manual`` / ``greedy``
+    (SRAM-feasible growth) / ``solver`` (exact-cover IP) / ``search``
+    (boundary-genome NSGA-II, budget via ``fusion_cfg`` — see
+    ``repro.core.fusion_search``)."""
     configs = grid(space)
     if sample is not None and sample < len(configs):
         rng = random.Random(seed)
         configs = rng.sample(configs, sample)
-    parts = {}
+    parts: dict = {}
     points: list[DSEPoint] = []
     for cfg in configs:
         hda = make_hda(**cfg)
@@ -55,12 +85,10 @@ def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
         engine = get_engine(hda)
         results = {}
         for wname, g in workloads.items():
-            part = None
-            if fusion == "manual":
-                if wname not in parts:
-                    parts[wname] = manual_fusion(g)
-                part = parts[wname]
-            results[wname] = schedule(g, hda, part, engine=engine)
+            part, quotient = _partition_for(g, hda, wname, fusion, parts,
+                                            engine, fusion_cfg)
+            results[wname] = schedule(g, hda, part, engine=engine,
+                                      quotient=quotient)
         points.append(DSEPoint(cfg, hda.name, results))
     return points
 

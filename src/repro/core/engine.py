@@ -39,9 +39,9 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from .accelerators import CoreSpec, HDASpec
-from .cost_model import (CostModel, NodeCost, collective_wire,
-                         comm_node_cost, comm_payload, compute_cycles,
-                         dma_node_cost, node_cost_arith, subgraph_tail)
+from .cost_model import (NodeCost, collective_wire, comm_node_cost,
+                         comm_payload, compute_cycles, dma_node_cost,
+                         node_cost_arith, subgraph_tail)
 from .graph import Node, WorkloadGraph, dtype_bytes
 from .memory import MEM_CATEGORIES, category_code
 
@@ -64,6 +64,18 @@ _CORE_KEYS: dict[tuple, int] = {}
 #: shared cost caches, keyed by interned ids — survive across engines
 _CYC: dict[tuple, float] = {}           # (core id, sig id) -> compute cycles
 _NODE_COSTS: dict[tuple, NodeCost] = {}  # (core id, sid, rmask, imask)
+
+
+#: fresh node signings since process start (``_sign_node`` invocations).
+#: Monotonic — the delta across a code region measures how much signature
+#: work it forced, e.g. the fusion-search tests assert a second evaluation
+#: of an identical partition signs zero nodes.
+_SIGN_COUNT = 0
+
+
+def sign_count() -> int:
+    """Total fresh node signings so far (monotonic counter)."""
+    return _SIGN_COUNT
 
 
 def _sig_id(sig: tuple) -> int:
@@ -166,6 +178,8 @@ _NO_MASK = ((), ())     # shared empty masks
 
 
 def _sign_node(graph: WorkloadGraph, s: GraphSigs, name: str) -> None:
+    global _SIGN_COUNT
+    _SIGN_COUNT += 1
     nd = graph.nodes[name]
     tensors = graph.tensors
     tb = s.tb
@@ -407,6 +421,19 @@ class BoundEngine:
 
     def fingerprint(self) -> tuple:
         return _fingerprint(self.graph, self.sigs)
+
+    def partition_sig(self, partition) -> tuple:
+        """Interned content signature of a partition: one small int per
+        fused group, derived from the member nodes' cost-signature ids in
+        order (the same process-wide intern table the node signatures use).
+        Two groups share an id iff they are content-identical, so search
+        memo tables keyed by this tuple are tiny and hit across
+        rename-equivalent graphs (e.g. ``.rc`` recompute clones) — the
+        fusion-configuration search keys its genome-evaluation cache on
+        this (see docs/fusion_search.md)."""
+        sid = self.sigs.sid
+        return tuple(_sig_id(("grp",) + tuple(sid[n] for n in sg))
+                     for sg in partition)
 
     # -- node cost ----------------------------------------------------------
 

@@ -180,6 +180,122 @@ def _external_outputs(ix: _Idx, S: frozenset) -> int:
 
 
 # ---------------------------------------------------------------------------
+# shared group-feasibility rules (enumeration + the boundary-genome search)
+# ---------------------------------------------------------------------------
+
+
+class GroupChecker:
+    """Incremental feasibility of one growing fused group under the paper's
+    backtracking constraints: the SRAM inequality Σᵢ mᵢ,c / T ≤ M_c
+    (``repro.core.memory.tile_working_set``), intra-core tiling
+    compatibility, the op-type budget (≤ max_conv conv, ≤ max_gemm GEMM) and
+    the length cap.  Feeds :func:`greedy_sram_partition` and the
+    boundary-genome decoder of ``repro.core.fusion_search`` (see
+    docs/fusion_search.md); the BFS candidate enumeration above keeps its
+    own inline copy of the same constraints on its hot path — keep the two
+    in sync when changing a rule.
+
+    A group is grown through an opaque *state* — ``new_state()`` →
+    ``try_add(state, node) -> state | None`` — so callers pay O(1) per
+    grow decision instead of re-checking the whole group.
+
+    ``enforce_single_output`` is deliberately *not* part of the rule set:
+    on a training graph nearly every forward tensor escapes to a backward
+    consumer, so the inference-style spill filter would forbid all fusion.
+    """
+
+    def __init__(self, g: WorkloadGraph, hda: HDASpec,
+                 cfg: FusionConfig | None = None):
+        self.g = g
+        self.cfg = cfg or FusionConfig()
+        self.cap = local_capacity(hda)
+        sigs = graph_sigs(g)
+        self.tiling = sigs.tiling          # node -> tiling factor
+        self.nbytes = sigs.io_bytes        # node -> unique in+out bytes
+
+    def isolated(self, name: str) -> bool:
+        """Collectives / DMA transfers run on their own resource (ici /
+        dma) and never fuse with compute — always singleton groups."""
+        return self.g.nodes[name].op_class in ("comm", "dma")
+
+    def new_state(self) -> tuple:
+        # (member names, (conv, gemm) counts, tiling factors > 1)
+        return ((), (0, 0), ())
+
+    def try_add(self, state: tuple, name: str):
+        """State with ``name`` appended, or ``None`` if the grown group
+        violates any constraint (the caller then cuts before ``name``).
+        Only the isolation rule applies to an empty state: a singleton is
+        always feasible (like the solver's singleton candidates), even
+        under degenerate configs such as ``max_conv=0``/``max_len=0``."""
+        members, counts, ts = state
+        if self.isolated(name) or (members and self.isolated(members[-1])):
+            return None
+        cfg = self.cfg
+        nd = self.g.nodes[name]
+        counts = _add_counts(counts, nd)
+        t = self.tiling[name]
+        if members:
+            if len(members) >= cfg.max_len:
+                return None
+            if counts[0] > cfg.max_conv or counts[1] > cfg.max_gemm:
+                return None
+            if cfg.enforce_tiling and t > 1 and \
+                    any(a % t and t % a for a in ts):
+                return None
+        members = members + (name,)
+        if cfg.enforce_memory and len(members) > 1:
+            ws = tile_working_set((self.nbytes[m] for m in members),
+                                  (self.tiling[m] for m in members))
+            if ws > self.cap:
+                return None
+        return (members, counts, ts + ((t,) if t > 1 else ()))
+
+    def feasible(self, group) -> bool:
+        """Whole-group check (non-incremental callers / tests)."""
+        group = list(group)
+        if len(group) == 1:
+            return True
+        state = self.new_state()
+        for n in group:
+            state = self.try_add(state, n)
+            if state is None:
+                return False
+        return True
+
+
+def greedy_sram_partition(g: WorkloadGraph, hda: HDASpec,
+                          cfg: FusionConfig | None = None,
+                          checker: GroupChecker | None = None) -> list[tuple]:
+    """Greedy SRAM-feasible growth along the topo order: extend the current
+    group while every :class:`GroupChecker` constraint holds, cut otherwise.
+    Groups are contiguous runs of the topo order, so the quotient is acyclic
+    by construction (every edge points forward).  This is the seed
+    individual of the fusion-configuration search
+    (``repro.core.fusion_search``) and a cheap HDA-aware baseline on its
+    own."""
+    checker = checker or GroupChecker(g, hda, cfg)
+    part: list[tuple] = []
+    state = checker.new_state()
+    for n in g.topo_order():
+        if checker.isolated(n):
+            if state[0]:
+                part.append(state[0])
+                state = checker.new_state()
+            part.append((n,))
+            continue
+        grown = checker.try_add(state, n)
+        if grown is None:
+            if state[0]:
+                part.append(state[0])
+            grown = checker.try_add(checker.new_state(), n)
+        state = grown                     # a singleton is always feasible
+    if state[0]:
+        part.append(state[0])
+    return part
+
+
+# ---------------------------------------------------------------------------
 # exact-cover IP:  min Σ x_g   s.t.   Σ_{g∋i} x_g = 1  ∀i
 # ---------------------------------------------------------------------------
 

@@ -20,7 +20,6 @@ def fast_non_dominated_sort(F: np.ndarray) -> list[np.ndarray]:
     One vectorized pairwise domination matrix feeds both the dominated-by
     relation and the domination counts (the former per-row scan computed the
     same relation twice), and front peeling is pure array arithmetic."""
-    n = F.shape[0]
     # dom[i, j]  <=>  i dominates j: all(F_i <= F_j) and any(F_i < F_j)
     le = np.all(F[:, None, :] <= F[None, :, :], axis=2)
     lt = np.any(F[:, None, :] < F[None, :, :], axis=2)

@@ -37,7 +37,7 @@ from dataclasses import dataclass, field
 
 from .accelerators import ClusterSpec
 from .cost_model import collective_wire, comm_payload
-from .fusion import FusionConfig, manual_fusion, repair_partition, solve_fusion
+from .fusion import FusionConfig
 from .graph import Node, TensorSpec, WorkloadGraph, dtype_bytes
 from .scheduling import ScheduleResult, schedule
 from .training_transform import TrainingGraph
@@ -580,13 +580,12 @@ def evaluate_parallel(tg: TrainingGraph, cluster: ClusterSpec,
     pp = strategy.pipeline
 
     def run(sg):
-        if fusion == "solver":
-            part, quotient = solve_fusion(sg, chip, fusion_cfg), None
-        elif fusion == "manual":
-            part, quotient = repair_partition(sg, manual_fusion(sg),
-                                              return_quotient=True)
-        else:
-            part, quotient = None, None
+        # shared fusion-mode dispatcher; fusion="search" gives every
+        # pipeline stage its own boundary-genome search, with comm
+        # send/recv nodes pinned to singleton 'ici' groups
+        from .fusion_search import fusion_partition
+        part, quotient = fusion_partition(sg, chip, fusion, fusion_cfg,
+                                          engine)
         return schedule(sg, chip, part, engine=engine,
                         use_engine=use_engine, quotient=quotient)
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 import re
 
 import jax
-import jax.ad_checkpoint as adc
 
 #: activation families tagged inside repro.models (checkpoint_name sites)
 KNOWN_SITES = (

@@ -139,17 +139,38 @@ class _Plan:
 
 _PLANS: OrderedDict = OrderedDict()
 _PLAN_CAP = 128
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    """Hit/miss counters of the (fingerprint, partition) plan cache — the
+    fusion-search benchmarks report these next to the engine's cache stats."""
+    return dict(_PLAN_STATS)
+
+
+def clear_plan_cache(cap: int | None = None) -> None:
+    """Drop every cached plan, reset the counters and optionally resize the
+    cache — ``benchmarks/bench_fusion_search.py`` clears it so the search
+    benchmark times cold plan builds instead of leftovers from earlier
+    benchmark entries in the same process."""
+    global _PLAN_CAP
+    _PLANS.clear()
+    _PLAN_STATS["hits"] = _PLAN_STATS["misses"] = 0
+    if cap is not None:
+        _PLAN_CAP = cap
 
 
 def _plan_for(graph: WorkloadGraph, partition: list, memo_key: tuple,
               quotient=None, sigs=None) -> _Plan:
     plan = _PLANS.get(memo_key)
     if plan is None:
+        _PLAN_STATS["misses"] += 1
         plan = _Plan(graph, partition, quotient, sigs)
         _PLANS[memo_key] = plan
         if len(_PLANS) > _PLAN_CAP:
             _PLANS.popitem(last=False)
     else:
+        _PLAN_STATS["hits"] += 1
         _PLANS.move_to_end(memo_key)
     return plan
 

@@ -14,7 +14,6 @@ are inlined once with FLOPs scaled by the trip count (node meta records
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax
@@ -101,7 +100,6 @@ class _Tracer:
     # -- eqn processing ------------------------------------------------------
 
     def process(self, jaxpr, scale: int = 1, prefix: str = "") -> None:
-        from jax.extend import core as jcore  # Literal lives here in new jax
         for eqn in jaxpr.eqns:
             prim = eqn.primitive.name
             sub = _subjaxpr(eqn)
@@ -124,7 +122,6 @@ class _Tracer:
 
     def _bind_sub(self, sub, eqn) -> None:
         """Alias the sub-jaxpr's invars to the outer tensors."""
-        inner = list(sub.invars) + list(sub.constvars)
         outer = list(eqn.invars)
         for iv, ov in zip(sub.invars, outer):
             self._pins.append(iv)

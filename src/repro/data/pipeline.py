@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig, ShapeConfig
-from ..distributed.sharding import Ax, ax
+from ..distributed.sharding import ax
 
 
 def _philox_u32(ctr: np.ndarray, key: int) -> np.ndarray:

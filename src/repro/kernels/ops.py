@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import fused_adam as _ad

@@ -19,7 +19,6 @@ Q is the chunk (128/256 → MXU-aligned); hp, N are 64/128 → lane-aligned.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,6 @@ from jax.experimental import pallas as pl
 def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
                       y_ref, st_ref, cum_ref):
     Q, hp = x_ref.shape[2], x_ref.shape[3]
-    N = b_ref.shape[3]
     x = x_ref[0, 0].astype(jnp.float32)           # (Q, hp)
     dt = dt_ref[0, 0].astype(jnp.float32)         # (Q,)
     b = b_ref[0, 0].astype(jnp.float32)           # (Q, N)

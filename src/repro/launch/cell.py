@@ -15,9 +15,8 @@ import jax.numpy as jnp
 
 from ..configs import get_config, get_shape
 from ..data.pipeline import input_axes, input_specs
-from ..distributed.sharding import (rules_override, shardings_for,
-                                     tree_shardings, use_mesh)
-from ..models.layers import abstract, axes_tree
+from ..distributed.sharding import rules_override, shardings_for, use_mesh
+from ..models.layers import abstract
 from ..models.transformer import (abstract_params, cache_axes, cache_specs,
                                   forward_hidden, param_axes,
                                   unembed_weight)

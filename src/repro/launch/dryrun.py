@@ -9,7 +9,7 @@ import json              # noqa: E402
 import sys               # noqa: E402
 import time              # noqa: E402
 
-from repro.configs import all_cells, cell_status, get_shape  # noqa: E402
+from repro.configs import all_cells, cell_status  # noqa: E402
 from repro.launch.cell import lower_cell                     # noqa: E402
 from repro.launch.mesh import make_production_mesh           # noqa: E402
 

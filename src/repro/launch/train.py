@@ -18,13 +18,11 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import statistics
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..ckpt.store import AsyncCheckpointer, latest_step, load_checkpoint
 from ..configs import get_config, get_shape, smoke_config

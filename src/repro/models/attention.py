@@ -10,9 +10,9 @@ The chunked path is the jnp reference of the Pallas flash kernel
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
+from jax.ad_checkpoint import checkpoint_name
 import jax.numpy as jnp
 
 from ..distributed.sharding import shard
@@ -48,7 +48,7 @@ def _qkv(p, x, cfg, positions):
     q = shard(q, "batch", "seq", "heads", None)
     k = shard(k, "batch", "seq", "kv_heads", None)
     v = shard(v, "batch", "seq", "kv_heads", None)
-    q = jax.ad_checkpoint.checkpoint_name(q, "qkv")
+    q = checkpoint_name(q, "qkv")
     return q, k, v
 
 
@@ -87,7 +87,7 @@ def gqa_attention(p, x, cfg, positions, window: int | None = None):
         ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v)
 
     ctx = ctx.reshape(B, S, H * hd)
-    ctx = jax.ad_checkpoint.checkpoint_name(ctx, "attn_out")
+    ctx = checkpoint_name(ctx, "attn_out")
     out = ctx @ p["wo"]
     return shard(out, "batch", "seq", "embed_act")
 
@@ -214,7 +214,7 @@ def mla_attention(p, x, cfg, positions):
     probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
     ctx = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(
         B, S, H * m.v_head_dim)
-    ctx = jax.ad_checkpoint.checkpoint_name(ctx, "attn_out")
+    ctx = checkpoint_name(ctx, "attn_out")
     return shard(ctx @ p["wo"], "batch", "seq", "embed_act")
 
 

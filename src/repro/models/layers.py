@@ -11,10 +11,11 @@ import math
 from dataclasses import dataclass
 
 import jax
+from jax.ad_checkpoint import checkpoint_name
 import jax.numpy as jnp
 import numpy as np
 
-from ..distributed.sharding import Ax, ax, pspec, shard
+from ..distributed.sharding import ax, shard
 
 
 @dataclass(frozen=True)
@@ -169,6 +170,6 @@ def mlp_apply(p: dict, x, cfg):
         h = jax.nn.gelu(h)
     elif cfg.mlp == "squared_relu":
         h = jnp.square(jax.nn.relu(h))
-    h = jax.ad_checkpoint.checkpoint_name(h, "mlp_hidden")
+    h = checkpoint_name(h, "mlp_hidden")
     out = h @ p["wo"]
     return shard(out, "batch", "seq", "embed_act")

@@ -11,6 +11,7 @@ aux loss (Switch-style).
 from __future__ import annotations
 
 import jax
+from jax.ad_checkpoint import checkpoint_name
 import jax.numpy as jnp
 
 from ..distributed.sharding import shard
@@ -81,7 +82,7 @@ def moe_apply(p: dict, x, cfg):
         h = act(g) * h
     else:
         h = jax.nn.gelu(h)
-    h = jax.ad_checkpoint.checkpoint_name(h, "moe_hidden")
+    h = checkpoint_name(h, "moe_hidden")
     out_e = jnp.einsum("becf,efd->becd", h, p["wo"])    # (B,E,C,D)
     out_e = shard(out_e, "batch", "experts", None, "embed_act")
 

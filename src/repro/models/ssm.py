@@ -9,6 +9,7 @@ buffer and the SSM state as cache.  All cumulative/decay terms in fp32.
 from __future__ import annotations
 
 import jax
+from jax.ad_checkpoint import checkpoint_name
 import jax.numpy as jnp
 
 from ..distributed.sharding import shard
@@ -120,7 +121,7 @@ def ssd_apply(p: dict, x, cfg):
     y = (y_intra + y_inter).reshape(B_, S, nh, hp)
     y = y + xh * p["D"][..., None].astype(xh.dtype)
     y = y.reshape(B_, S, di)
-    y = jax.ad_checkpoint.checkpoint_name(y, "ssm_state")
+    y = checkpoint_name(y, "ssm_state")
 
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                 p["norm"], cfg.norm_eps)

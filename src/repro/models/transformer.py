@@ -11,9 +11,9 @@ core.remat_policy).
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
+from jax.ad_checkpoint import checkpoint_name
 import jax.numpy as jnp
 
 from ..core.remat_policy import resolve_remat
@@ -93,7 +93,7 @@ def param_axes(cfg):
 
 def _apply_layer(prm, x, cfg, spec, positions):
     h = rmsnorm(x, prm["ln1"]["scale"], cfg.norm_eps)
-    h = jax.ad_checkpoint.checkpoint_name(h, "attn_in")
+    h = checkpoint_name(h, "attn_in")
     if spec.mixer == "attn":
         mix = gqa_attention(prm["attn"], h, cfg, positions, window=None)
     elif spec.mixer == "local":
@@ -111,7 +111,7 @@ def _apply_layer(prm, x, cfg, spec, positions):
     elif cfg.mlp != "none":
         h2 = rmsnorm(x, prm["ln2"]["scale"], cfg.norm_eps)
         x = x + mlp_apply(prm["mlp"], h2, cfg)
-    x = jax.ad_checkpoint.checkpoint_name(x, "block_out")
+    x = checkpoint_name(x, "block_out")
     seq_ax = "seq_sp" if cfg.seq_sharded_acts else "seq"
     return shard(x, "batch", seq_ax, "embed_act"), aux
 

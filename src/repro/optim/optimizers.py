@@ -14,7 +14,6 @@ API: ``opt.init(params) -> state``;
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable
 
 import jax

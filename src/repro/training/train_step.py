@@ -9,7 +9,6 @@ each microbatch's gradient all-reduce with the next one's backward pass.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,5 @@ import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers", "slow: long-running test (subprocess dry-runs etc.)")
+# the `slow` marker is registered in pyproject.toml ([tool.pytest.ini_options])
+# and deselected by the CI fast leg: CI_SKIP_SLOW=1 scripts/ci.sh

@@ -9,7 +9,7 @@ from repro.core import (activation_set, apply_checkpointing,
                         build_training_graph, edge_tpu,
                         evaluate_checkpointing, fast_non_dominated_sort,
                         ga_checkpointing, knapsack_baseline, mlp_graph,
-                        nsga2, recompute_flops, resnet18_graph, schedule,
+                        nsga2, recompute_flops, resnet18_graph,
                         stored_activation_bytes)
 
 
@@ -137,6 +137,7 @@ def test_nsga2_on_zdt1():
     assert len(res.pareto_F) >= 2
 
 
+@pytest.mark.slow
 def test_ga_checkpointing_pareto(tg, hda):
     res = ga_checkpointing(tg, hda, pop_size=10, generations=5, seed=0)
     assert len(res.pareto) >= 1

@@ -8,7 +8,7 @@ from jax.sharding import Mesh
 
 from repro.configs import smoke_config
 from repro.core.fusion import repair_partition
-from repro.core.graph import Node, TensorSpec, WorkloadGraph
+from repro.core.graph import Node, WorkloadGraph
 from repro.core.scheduling import quotient_dag
 from repro.distributed.sharding import use_mesh
 from repro.models import init_params, logits_fn
@@ -77,7 +77,7 @@ def test_repair_keeps_acyclic_partition():
 
 def test_cell_optimizer_variant():
     """Adafactor cells produce (much) smaller optimizer state trees."""
-    from repro.models.transformer import abstract_params, param_axes
+    from repro.models.transformer import abstract_params
     from repro.optim.optimizers import make_optimizer
     cfg = smoke_config("phi3-medium-14b")
     ap = abstract_params(cfg)

@@ -9,7 +9,7 @@ the reference; the default path goes through ``repro.core.engine``.
 import pytest
 
 from repro.core import (apply_checkpointing, activation_set,
-                        build_training_graph, edge_tpu, fusemax, get_engine,
+                        build_training_graph, edge_tpu, fusemax,
                         gpt2_graph, layer_by_layer, manual_fusion,
                         resnet18_graph, schedule)
 from repro.core.engine import EvalEngine, graph_sigs

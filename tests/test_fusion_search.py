@@ -1,0 +1,206 @@
+"""Fusion-configuration search tests (src/repro/core/fusion_search.py).
+
+Covers the ISSUE-5 acceptance bars: determinism under a fixed seed,
+engine-cache interaction (a second evaluation of an identical partition
+costs zero fresh node signings), and parity of the searched best against
+exhaustive enumeration on a tiny graph.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationPolicy, FusionSearchConfig,
+                        build_training_graph, decode_genome, edge_tpu,
+                        encode_partition, evaluate_partition,
+                        exhaustive_fusion, greedy_sram_partition,
+                        layer_by_layer, mlp_graph, quotient_dag,
+                        resnet18_graph, search_fusion, search_fusion_policy,
+                        sweep, uniform_policy)
+from repro.core.engine import EvalEngine, sign_count
+from repro.core.fusion import GroupChecker
+
+
+@pytest.fixture(scope="module")
+def hda():
+    return edge_tpu()
+
+
+@pytest.fixture(scope="module")
+def tg():
+    return build_training_graph(mlp_graph(batch=8, widths=(32, 32)), "adam")
+
+
+# ---------------------------------------------------------------------------
+# genome encoding / decoding
+# ---------------------------------------------------------------------------
+
+
+def test_ones_genome_decodes_to_layer_by_layer(tg, hda):
+    g = tg.graph
+    checker = GroupChecker(g, hda)
+    part = decode_genome(g.topo_order(), np.ones(len(g) - 1, bool), checker)
+    assert part == layer_by_layer(g)
+
+
+def test_zeros_genome_decodes_to_greedy_growth(tg, hda):
+    g = tg.graph
+    checker = GroupChecker(g, hda)
+    part = decode_genome(g.topo_order(), np.zeros(len(g) - 1, bool), checker)
+    assert part == greedy_sram_partition(g, hda)
+    assert any(len(sg) > 1 for sg in part)   # growth actually fused something
+
+
+def test_encode_decode_roundtrip(tg, hda):
+    g = tg.graph
+    order = g.topo_order()
+    checker = GroupChecker(g, hda)
+    part = greedy_sram_partition(g, hda)
+    genome = encode_partition(order, part)
+    assert decode_genome(order, genome, checker) == part
+
+
+def test_random_genomes_decode_to_valid_partitions(tg, hda):
+    g = tg.graph
+    order = g.topo_order()
+    checker = GroupChecker(g, hda)
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        genome = rng.random(len(order) - 1) < 0.5
+        part = decode_genome(order, genome, checker)
+        # exact cover + acyclic quotient (raises otherwise)
+        assert sorted(n for sg in part for n in sg) == sorted(g.nodes)
+        quotient_dag(g, part)
+        assert all(checker.feasible(sg) for sg in part)
+
+
+def test_decoded_groups_respect_constraints(tg, hda):
+    g = tg.graph
+    checker = GroupChecker(g, hda)
+    cfg = checker.cfg
+    part = decode_genome(g.topo_order(), np.zeros(len(g) - 1, bool), checker)
+    for sg in part:
+        assert len(sg) <= cfg.max_len
+        classes = [g.nodes[n].op_class for n in sg]
+        assert classes.count("conv") <= cfg.max_conv
+        assert classes.count("gemm") <= cfg.max_gemm
+
+
+# ---------------------------------------------------------------------------
+# engine-cache interaction
+# ---------------------------------------------------------------------------
+
+
+def test_second_evaluation_costs_zero_fresh_signings(tg, hda):
+    g = tg.graph
+    eng = EvalEngine(hda)
+    part = greedy_sram_partition(g, hda)
+    first = evaluate_partition(g, hda, part, engine=eng)
+
+    signs0 = sign_count()
+    stats0 = dict(eng.stats)
+    second = evaluate_partition(g, hda, part, engine=eng)
+
+    assert sign_count() - signs0 == 0          # no node re-signed
+    assert eng.stats["node_misses"] == stats0["node_misses"]
+    assert eng.stats["sg_misses"] == stats0["sg_misses"]
+    assert eng.stats["sched_hits"] == stats0["sched_hits"] + 1
+    assert second.objectives == first.objectives
+
+
+def test_partition_sig_distinguishes_boundaries(tg, hda):
+    g = tg.graph
+    eng = EvalEngine(hda)
+    bound = eng.bind(g)
+    p1 = layer_by_layer(g)
+    p2 = greedy_sram_partition(g, hda)
+    assert bound.partition_sig(p1) != bound.partition_sig(p2)
+    assert bound.partition_sig(p2) == bound.partition_sig(list(p2))
+
+
+# ---------------------------------------------------------------------------
+# the search
+# ---------------------------------------------------------------------------
+
+
+def test_search_deterministic_under_fixed_seed(tg, hda):
+    cfg = FusionSearchConfig(pop_size=8, generations=4, seed=7)
+    r1 = search_fusion(tg.graph, hda, cfg)
+    r2 = search_fusion(tg.graph, hda, cfg)
+    assert r1.best.partition == r2.best.partition
+    assert [c.objectives for c in r1.pareto] == \
+        [c.objectives for c in r2.pareto]
+
+
+def test_search_matches_exhaustive_on_tiny_graph(hda):
+    g = mlp_graph(batch=4, d_in=16, widths=(16,), n_classes=4)
+    exact = exhaustive_fusion(g, hda)
+    found = search_fusion(g, hda,
+                          FusionSearchConfig(pop_size=8, generations=6))
+    assert found.best.latency == exact.best.latency
+    assert min(c.peak_mem for c in found.pareto) == \
+        min(c.peak_mem for c in exact.pareto)
+    assert found.best.partition == exact.best.partition
+
+
+def test_searched_best_dominates_unfused_baseline(hda):
+    tg = build_training_graph(resnet18_graph(1, 32), "adam")
+    res = search_fusion(tg.graph, hda,
+                        FusionSearchConfig(pop_size=8, generations=4))
+    assert len(res.pareto) >= 3                  # non-degenerate front
+    assert res.best_dominates_baseline
+    assert res.best.latency < res.baseline.latency
+    assert res.best.peak_mem <= res.baseline.peak_mem
+    # front is mutually non-dominated on the objective tuple
+    for c in res.pareto:
+        assert not any(
+            all(a <= b for a, b in zip(o.objectives, c.objectives))
+            and any(a < b for a, b in zip(o.objectives, c.objectives))
+            for o in res.pareto if o is not c)
+
+
+# ---------------------------------------------------------------------------
+# composition with the policy and sweep axes
+# ---------------------------------------------------------------------------
+
+
+def test_policy_composed_search_keeps_dma_singleton(tg, hda):
+    res = search_fusion_policy(
+        tg, hda, uniform_policy(tg, ActivationPolicy.OFFLOAD),
+        FusionSearchConfig(pop_size=6, generations=2))
+    g2_nodes = {n for sg in res.best.partition for n in sg}
+    dma = {n for n in g2_nodes
+           if n.startswith(("offload:", "fetch:"))}
+    assert dma                      # the offload rewrite actually happened
+    for sg in res.best.partition:
+        if any(n in dma for n in sg):
+            assert len(sg) == 1
+
+
+def test_singletons_feasible_under_degenerate_configs(tg, hda):
+    # max_conv=0 / max_len=0 must isolate nodes, never crash (a singleton
+    # is always feasible, like the solver's singleton candidates)
+    from repro.core import FusionConfig
+    for cfg in (FusionConfig(max_conv=0, max_gemm=0), FusionConfig(max_len=0)):
+        part = greedy_sram_partition(tg.graph, hda, cfg)
+        assert sorted(n for sg in part for n in sg) == sorted(tg.graph.nodes)
+
+
+def test_unknown_fusion_mode_raises(tg, hda):
+    from repro.core import evaluate_policy, fusion_partition
+    with pytest.raises(ValueError, match="unknown fusion mode"):
+        fusion_partition(tg.graph, hda, "greed")
+    with pytest.raises(ValueError, match="unknown fusion mode"):
+        evaluate_policy(tg, hda, {}, fusion="solvr")
+
+
+def test_sweep_fusion_modes(tg, hda):
+    w = {"mlp": mlp_graph()}
+    space = {"x_pes": [4], "y_pes": [4], "simd_units": [64], "lanes": [4]}
+    lat = {}
+    for mode in ("none", "greedy", "search"):
+        pts = sweep(edge_tpu, space, w, fusion=mode,
+                    fusion_cfg=FusionSearchConfig(pop_size=6, generations=2))
+        assert len(pts) == 1
+        lat[mode] = pts[0].results["mlp"].latency
+    assert lat["greedy"] <= lat["none"]
+    assert lat["search"] <= lat["none"]

@@ -2,7 +2,7 @@
 
 import pytest
 
-from repro.core import (GraphBuilder, GraphError, Node, TensorSpec,
+from repro.core import (GraphError, Node, TensorSpec,
                         WorkloadGraph, build_training_graph, gpt2_graph,
                         mlp_graph, resnet18_graph)
 

@@ -226,6 +226,7 @@ def test_offload_dma_overlaps_with_compute(tg, hda):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_ga_policy_offload_dominates_recompute(hda):
     tg = build_training_graph(gpt2_graph(1, 64, 64, 2, 2, 256), "adam")
     res = ga_policy(tg, hda, pop_size=12, generations=4, seed=0)

@@ -11,7 +11,7 @@ import pytest
 from repro.core import (ClusterSpec, Node, ParallelStrategy, TensorSpec,
                         build_training_graph, collective_wire, comm_cycles,
                         datacenter_cluster, edge_cluster, edge_tpu,
-                        evaluate_parallel, fusemax, get_engine, gpt2_graph,
+                        evaluate_parallel, get_engine, gpt2_graph,
                         graph_sigs, graph_wire_bytes, manual_fusion,
                         mlp_graph, nsga2_int, parallelize, quotient_dag,
                         resnet18_graph, schedule, strategy_space,

@@ -12,6 +12,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+# the whole module is a randomized sweep — deselected by the CI fast leg
+pytestmark = pytest.mark.slow
+
 from repro.core import (ActivationPolicy, FusionConfig, GraphBuilder,
                         apply_policy, build_training_graph, edge_tpu,
                         knapsack_baseline, manual_fusion, quotient_dag,
@@ -151,7 +154,6 @@ def test_nds_front_is_nondominated(n, m, seed):
 @given(dims=st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 64]),
                      min_size=1, max_size=4))
 def test_prune_pspec_divisibility(dims):
-    import os
     # synthesize a fake 2x2 mesh on CPU without forking
     devs = jax.devices()
     if len(devs) < 1:

@@ -29,8 +29,14 @@ EXPECTED = {
     # evaluation engine
     "EvalEngine", "GraphSigs", "get_engine", "clear_engines", "graph_sigs",
     # fusion
-    "FusionConfig", "enumerate_candidates", "layer_by_layer",
-    "manual_fusion", "solve_cover", "solve_fusion",
+    "FusionConfig", "GroupChecker", "enumerate_candidates",
+    "greedy_sram_partition", "layer_by_layer", "manual_fusion",
+    "solve_cover", "solve_fusion",
+    # fusion-configuration search
+    "FusionCandidate", "FusionSearchConfig", "FusionSearchResult",
+    "best_partition", "decode_genome", "encode_partition",
+    "evaluate_partition", "exhaustive_fusion", "fusion_partition",
+    "search_fusion", "search_fusion_policy",
     # checkpointing + policies + NSGA-II
     "ACResult", "ACSolution", "PolicyResult", "PolicySolution",
     "activation_set", "apply_checkpointing", "apply_policy",

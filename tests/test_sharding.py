@@ -13,9 +13,8 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.distributed.sharding import (RULES, ax, pspec, prune_pspec,
+from repro.distributed.sharding import (ax, pspec, prune_pspec,
                                         rules_override, shardings_for,
-                                        tree_pspecs, use_mesh,
                                         zero_state_axes)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

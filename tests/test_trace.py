@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import trace_fn, trace_model
 from repro.core.scheduling import schedule
