@@ -28,6 +28,11 @@ def main() -> None:
                     help="write BENCH_eval.json (us_per_call per entry) "
                          "for cross-PR perf tracking")
     args = ap.parse_args()
+    if os.environ.get("REPRO_SANITIZE", "") not in ("", "0"):
+        # timed runs with runtime shadow-verification (repro.core.verify)
+        # enabled would record garbage into the perf trajectory
+        sys.exit("benchmarks: refusing to run with REPRO_SANITIZE set — "
+                 "sanitizer mode must never touch timed runs")
 
     print("name,us_per_call,derived")
     want = lambda n: not args.only or args.only == n

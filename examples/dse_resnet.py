@@ -43,7 +43,7 @@ def main():
                                       lambda p, m=mode: p.results[m].energy])
         print(f"\n{mode}: {len(front)} Pareto-optimal configs "
               f"of {len(points)}:")
-        for p in sorted(front, key=lambda p: p.results[mode].latency)[:5]:
+        for p in sorted(front, key=lambda p, m=mode: p.results[m].latency)[:5]:
             r = p.results[mode]
             print(f"  lat={r.latency:11.4g}  E={r.energy:11.4g}  "
                   f"{p.config}")

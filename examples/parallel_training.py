@@ -54,7 +54,7 @@ def main():
                 if not cand:
                     print(f"  {n:3d} chips: no feasible strategy")
                     continue
-                best = max(cand, key=lambda p: p.results[wname].throughput)
+                best = max(cand, key=lambda p, w=wname: p.results[w].throughput)
                 r = best.results[wname]
                 print(f"  {n:3d} chips: {best.strategy.label:14s} "
                       f"thr={r.throughput:10.4g} samples/s  "
@@ -74,7 +74,7 @@ def main():
         res, decode = ga_parallel(tg, edge_cluster, args.chips,
                                   pop_size=12, generations=6)
         print("\njoint (chips × strategy × ckpt-budget) GA Pareto front:")
-        for x, f in zip(res.pareto_X, res.pareto_F):
+        for x, f in zip(res.pareto_X, res.pareto_F, strict=True):
             cluster, strat, frac = decode(x)
             print(f"  {cluster.n_chips:3d} chips  {strat.label:14s} "
                   f"keep={frac:4.2f}  thr={-f[0]:10.4g}  E={f[1]:10.4g}  "

@@ -108,6 +108,14 @@ def main() -> int:
                 json.dump(summary, f, indent=1)
         return code
 
+    if os.environ.get("REPRO_SANITIZE", "") not in ("", "0"):
+        # timed runs must never execute with runtime shadow-verification on
+        # (repro.core.verify) — numbers recorded that way are garbage and
+        # must not overwrite the perf trajectory.  Fail loudly, never warn.
+        return finish(
+            "sanitizer_leak", 1,
+            "bench guard: REPRO_SANITIZE is set — sanitizer mode leaked "
+            "into a timed benchmark run; unset it and re-run [exit 1]")
     if os.environ.get("BENCH_GUARD_SKIP") == "1":
         return finish("skipped", 0, "bench guard skipped (BENCH_GUARD_SKIP=1)")
     base = load(args.baseline)

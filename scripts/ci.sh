@@ -4,6 +4,9 @@
 #
 #   scripts/ci.sh                  # full tier-1 (skips hypothesis if absent)
 #   CI_SKIP_SLOW=1 scripts/ci.sh   # fast leg: deselects @pytest.mark.slow
+#   CI_SANITIZE=1 scripts/ci.sh    # sanitizer leg: fast tests under
+#                                  # REPRO_SANITIZE=1 (no benchmarks — the
+#                                  # sanitizer must never touch timed runs)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,6 +28,16 @@ PYTEST_ARGS=(-x -q)
 if ! python -c "import hypothesis" 2>/dev/null; then
     echo "ci: hypothesis not installed — skipping tests/test_property.py"
     PYTEST_ARGS+=(--ignore=tests/test_property.py)
+fi
+
+if [[ "${CI_SANITIZE:-0}" == "1" ]]; then
+    # sanitizer leg: fast test selection with runtime shadow-verification
+    # (repro.core.verify) on every schedule-cache miss.  Exits before the
+    # benchmark sweep below, so by construction REPRO_SANITIZE can never
+    # leak into timed runs (check_bench_regression.py also refuses it).
+    REPRO_SANITIZE=1 python -m pytest "${PYTEST_ARGS[@]}" -m "not slow"
+    echo "ci: sanitizer leg green (REPRO_SANITIZE=1)"
+    exit 0
 fi
 
 if [[ "${CI_SKIP_SLOW:-0}" == "1" ]]; then

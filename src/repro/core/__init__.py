@@ -15,6 +15,8 @@ Layers:
   checkpointing / nsga2       — activation-policy GA (+MILP baseline)
   dse                         — hardware design-space sweeps
   remat_policy                — MONET decision → real jax.checkpoint policy
+  verify                      — model-invariant verifier + engine cache-
+                                coherence sanitizer (M/S/C rule codes)
 """
 
 from .accelerators import (EDGE_TPU_SPACE, FUSEMAX_SPACE, TPU_V5E,
@@ -58,6 +60,9 @@ from .scheduling import ScheduleResult, quotient_dag, schedule
 from .trace import trace_fn, trace_model
 from .training_transform import (OPTIMIZERS, TrainingGraph,
                                  build_training_graph)
+from .verify import (RULES, Finding, VerificationError, sanitize_enabled,
+                     verify_cache, verify_graph, verify_parallel,
+                     verify_result, verify_schedule)
 from .zoo import gpt2_graph, mlp_graph, resnet18_graph
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -7,7 +7,7 @@ graphs through the scheduler, and extracts Pareto fronts.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 from .accelerators import HDASpec, grid
 from .engine import get_engine
@@ -15,6 +15,7 @@ from .fusion_search import FusionSearchConfig, fusion_partition
 from .graph import WorkloadGraph
 from .memory import local_capacity
 from .scheduling import schedule
+from .verify import verify_result
 
 
 @dataclass
@@ -22,6 +23,7 @@ class DSEPoint:
     config: dict
     hda: str
     results: dict          # workload name -> ScheduleResult
+    findings: dict = field(default_factory=dict)   # workload -> verifier report
 
     def row(self) -> dict:
         out = dict(self.config)
@@ -90,6 +92,20 @@ def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
             results[wname] = schedule(g, hda, part, engine=engine,
                                       quotient=quotient)
         points.append(DSEPoint(cfg, hda.name, results))
+    # certify the sweep winner per workload (min latency): one verifier
+    # sweep per workload, not per config — the M/S/C findings land on the
+    # winning DSEPoint (empty list = clean)
+    for wname, g in workloads.items():
+        if not points:
+            break
+        best = min(points, key=lambda p, w=wname: p.results[w].latency)
+        hda = make_hda(**best.config)
+        engine = get_engine(hda)
+        part, _ = _partition_for(g, hda, wname, fusion, parts, engine,
+                                 fusion_cfg)
+        best.findings[wname] = verify_result(
+            g, hda, part or [(n,) for n in g.topo_order()],
+            best.results[wname], engine=engine)
     return points
 
 
@@ -163,8 +179,8 @@ def pareto_front(points: list, metrics) -> list:
     for i, vi in enumerate(vals):
         dominated = False
         for j, vj in enumerate(vals):
-            if i != j and all(a <= b for a, b in zip(vj, vi)) and \
-                    any(a < b for a, b in zip(vj, vi)):
+            if i != j and all(a <= b for a, b in zip(vj, vi, strict=True)) and \
+                    any(a < b for a, b in zip(vj, vi, strict=True)):
                 dominated = True
                 break
         if not dominated:

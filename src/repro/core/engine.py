@@ -566,7 +566,7 @@ class BoundEngine:
 
         per_core: dict[str, float] = {}
         offchip = local = energy = 0.0
-        for nd, tri in zip(node_objs, triples):
+        for nd, tri in zip(node_objs, triples, strict=True):
             c = self.node_cost(nd, *tri)
             cls = nd.op_class
             cname = eng.resource_for_class(cls)

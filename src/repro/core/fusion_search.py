@@ -49,6 +49,7 @@ from .graph import WorkloadGraph
 from .nsga2 import NSGA2Result, nsga2
 from .scheduling import ScheduleResult, schedule
 from .training_transform import TrainingGraph
+from .verify import verify_result
 
 
 @dataclass
@@ -98,6 +99,7 @@ class FusionSearchResult:
     ga: NSGA2Result | None
     order: list                    # topo order the genome indexes
     stats: dict                    # evaluation / cache counters
+    findings: list = field(default_factory=list)   # verifier report on best
 
     @property
     def best_dominates_baseline(self) -> bool:
@@ -226,8 +228,8 @@ def _pareto_of(cands: list) -> list:
             continue
         seen.add(c.partition)
         dominated = any(
-            all(a <= b for a, b in zip(o.objectives, c.objectives))
-            and any(a < b for a, b in zip(o.objectives, c.objectives))
+            all(a <= b for a, b in zip(o.objectives, c.objectives, strict=True))
+            and any(a < b for a, b in zip(o.objectives, c.objectives, strict=True))
             for o in cands if o is not c)
         if not dominated:
             out.append(c)
@@ -278,7 +280,12 @@ def search_fusion(g: WorkloadGraph, hda: HDASpec,
     stats["fresh_signings"] = sign_count() - sign0
     for k, v in eng.stats.items():
         stats[f"engine_{k}"] = v - stats0[k]
-    return FusionSearchResult(baseline, greedy, best, front, ga, order, stats)
+    # certify the winning candidate (M/S/C rule sweep — docs/verify.md);
+    # runs after the stats capture so the zero-fresh-signings bars hold
+    findings = verify_result(g, hda, list(best.partition), best.schedule,
+                             engine=eng)
+    return FusionSearchResult(baseline, greedy, best, front, ga, order,
+                              stats, findings)
 
 
 def exhaustive_fusion(g: WorkloadGraph, hda: HDASpec,

@@ -21,7 +21,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 from functools import cached_property
-from typing import Iterable
+from collections.abc import Iterable
 
 import numpy as np
 
@@ -313,6 +313,23 @@ class WorkloadGraph:
 
     def validate(self) -> None:
         self.topo_order()
+        # ground-truth read counts straight from the node table: the derived
+        # consumer lists must mirror them exactly (multiset equality), or a
+        # rewire (replace_tensor / rename_tensor_for) left a stale entry
+        reads: dict[str, dict[str, int]] = {}
+        for name, nd in self.nodes.items():
+            for t in nd.inputs:
+                m = reads.setdefault(t, {})
+                m[name] = m.get(name, 0) + 1
+            for t in nd.outputs:
+                if self.producer.get(t) != name:
+                    raise GraphError(
+                        f"tensor {t!r} produced by {name!r} but producer map "
+                        f"says {self.producer.get(t)!r}")
+        for t, p in self.producer.items():
+            if p not in self.nodes or t not in self.nodes[p].outputs:
+                raise GraphError(f"producer map entry {t!r} -> {p!r} does not "
+                                 "match any node output")
         for t, cs in self.consumers.items():
             spec = self.tensors[t]
             if t not in self.producer and not (
@@ -320,6 +337,22 @@ class WorkloadGraph:
             ) and cs:
                 raise GraphError(f"tensor {t!r} consumed but never produced and "
                                  "not a param/state/input")
+            listed: dict[str, int] = {}
+            for c in cs:
+                listed[c] = listed.get(c, 0) + 1
+            if listed != reads.get(t, {}):
+                raise GraphError(
+                    f"stale consumer list for {t!r}: records {listed} but "
+                    f"node inputs read {reads.get(t, {})}")
+        for t in reads:
+            if t not in self.consumers:
+                raise GraphError(f"tensor {t!r} read by nodes but has no "
+                                 "consumer list")
+        if self._adj is not None and self._adj[0] == self._version \
+                and self._adj_dirty:
+            raise GraphError(
+                "adjacency cache claims the current version but has pending "
+                f"patch entries for {sorted(self._adj_dirty)[:5]}")
 
     # -- queries ------------------------------------------------------------
 
@@ -425,9 +458,14 @@ class WorkloadGraph:
         nd = self.nodes[node]
         if old not in nd.inputs:
             raise GraphError(f"{node} does not read {old}")
+        k = nd.inputs.count(old)
         nd.inputs = [new if t == old else t for t in nd.inputs]
-        self._own_consumers(old).remove(node)
-        self._own_consumers(new).append(node)
+        # the consumer lists hold one entry per read — rewire all k of them,
+        # not just the first, or a duplicate input leaves a stale entry
+        cs = self._own_consumers(old)
+        for _ in range(k):
+            cs.remove(node)
+        self._own_consumers(new).extend([node] * k)
         self._version += 1
         self._dirty_nodes.add(node)
         if self._adj is not None:

@@ -311,7 +311,7 @@ def tile_working_set(nbytes, tilings) -> float:
     tilings = list(tilings)
     tmin = min([t for t in tilings if t > 1], default=1)
     return sum(b / max(1, tmin if t > 1 else 1)
-               for b, t in zip(nbytes, tilings))
+               for b, t in zip(nbytes, tilings, strict=True))
 
 
 # ---------------------------------------------------------------------------

@@ -257,7 +257,7 @@ def _apply_data_parallel(g: WorkloadGraph, param_grads: dict,
     across the dp group before its optimizer consumers."""
     if dp <= 1:
         return
-    for p, dg in param_grads.items():
+    for dg in param_grads.values():
         if dg not in g.tensors:
             continue
         opt_cons = [c for c in list(g.consumers.get(dg, ()))
@@ -389,7 +389,7 @@ def _split_stages(g: WorkloadGraph, pp: int) -> list[WorkloadGraph]:
         # receives first (they produce boundary tensors consumed here); a
         # recv of a forward activation keeps kind 'fwd' so the stage's
         # activation-set accounting still sees it, gradients stay neutral
-        for t, (ps, targets) in cross.items():
+        for t, (_ps, targets) in cross.items():
             if s in targets:
                 spec = g.tensors[t]
                 if t not in sg.tensors:
@@ -531,6 +531,7 @@ class ParallelResult:
     spill_bytes: float = 0.0     # cluster total DMA offload bytes / iteration
     stage_results: list = field(default_factory=list)   # full stage graphs
     body_results: list = field(default_factory=list)    # per-microbatch body
+    findings: list = field(default_factory=list)        # verifier report
 
     def as_row(self) -> dict:
         return dict(strategy=self.strategy.label, chips=self.n_chips,
@@ -610,12 +611,12 @@ def evaluate_parallel(tg: TrainingGraph, cluster: ClusterSpec,
 
     t_body = max(r.latency for r in bodies)
     tail = max(max(f.latency - b.latency, 0.0)
-               for f, b in zip(results, bodies))
+               for f, b in zip(results, bodies, strict=True))
     latency = (m + pp - 1) * t_body + tail
     leak = chip.leak_per_cycle()
     replicas = strategy.data * strategy.tensor
     energy = offchip = wire = spill = 0.0
-    for f, b, wf, wb in zip(results, bodies, wire_full, wire_body):
+    for f, b, wf, wb in zip(results, bodies, wire_full, wire_body, strict=True):
         active = (m - 1) * b.latency + f.latency
         energy += (m - 1) * b.energy + f.energy + (latency - active) * leak
         offchip += (m - 1) * b.offchip_bytes + f.offchip_bytes
@@ -636,13 +637,26 @@ def evaluate_parallel(tg: TrainingGraph, cluster: ClusterSpec,
     feasible = (cluster.mem_capacity <= 0) or (peak <= cluster.mem_capacity)
     samples = _local_batch(tg.graph) * strategy.data * m
     seconds = latency / (chip.freq_ghz * 1e9)
+    # parallel-symmetry scan (M030-M032, docs/verify.md): collective degrees
+    # vs the strategy, send/recv pairing across stages, shard-byte totals.
+    # Cheap (pure bookkeeping), so it is always on; per-stage structural
+    # verification is the sanitizer's job (schedule() cache misses).
+    from .verify import sanitize_enabled, verify_graph, verify_parallel
+    findings = verify_parallel(tg, plan)
+    if sanitize_enabled():
+        for sg in plan.stage_graphs:
+            findings += verify_graph(sg)
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            from .verify import VerificationError
+            raise VerificationError(errors)
     return ParallelResult(
         strategy=strategy, cluster=cluster.name, n_chips=cluster.n_chips,
         latency=latency, energy=energy, peak_mem=peak,
         offchip_bytes=offchip, wire_bytes=wire,
         throughput=samples / max(seconds, 1e-30), feasible=feasible,
         samples_per_iter=samples, spill_bytes=spill,
-        stage_results=results, body_results=bodies)
+        stage_results=results, body_results=bodies, findings=findings)
 
 
 # ---------------------------------------------------------------------------

@@ -78,7 +78,7 @@ def quotient_dag(graph: WorkloadGraph, partition: list) -> tuple[dict, dict]:
             a, b = sg_of[n], sg_of[s]
             if a != b and b not in succ[a]:
                 succ[a].add(b)
-    for a, bs in succ.items():
+    for bs in succ.values():
         for b in bs:
             pred_count[b] += 1
     # acyclicity check
@@ -202,6 +202,12 @@ def schedule(graph: WorkloadGraph, hda: HDASpec, partition: list | None = None,
         costs = [bound.subgraph_cost(sg) for sg in partition]
         res = _assemble_fast(hda, plan, costs)
         eng.sched_put(memo_key, res)
+        # sanitizer mode: shadow-verify every cache miss (the warm cache-hit
+        # path above is never instrumented — see docs/verify.md)
+        from .verify import sanitize_enabled, verify_result
+        if sanitize_enabled():
+            verify_result(graph, hda, partition, res, engine=eng,
+                          tensor_parallel=tensor_parallel, strict=True)
         return replace(res, per_core_busy=dict(res.per_core_busy),
                        mem_breakdown=dict(res.mem_breakdown))
 

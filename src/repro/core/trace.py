@@ -123,7 +123,7 @@ class _Tracer:
     def _bind_sub(self, sub, eqn) -> None:
         """Alias the sub-jaxpr's invars to the outer tensors."""
         outer = list(eqn.invars)
-        for iv, ov in zip(sub.invars, outer):
+        for iv, ov in zip(sub.invars, outer, strict=True):
             self._pins.append(iv)
             if hasattr(ov, "val"):
                 self.var_tensor[id(iv)] = self.const_tensor(ov.val)
@@ -131,7 +131,7 @@ class _Tracer:
                 self.var_tensor[id(iv)] = self.tensor_for(ov)
 
     def _bind_sub_out(self, sub, eqn) -> None:
-        for sv, ov in zip(sub.outvars, eqn.outvars):
+        for sv, ov in zip(sub.outvars, eqn.outvars, strict=True):
             self._pins.extend((sv, ov))
             if hasattr(sv, "val"):
                 self.var_tensor[id(ov)] = self.const_tensor(sv.val)
@@ -227,7 +227,7 @@ def trace_fn(fn, *example_args, name: str = "traced", **kw) -> WorkloadGraph:
     jaxpr = closed.jaxpr
     for v in jaxpr.invars:
         tr.tensor_for(v, "in", is_input=True)
-    for v, val in zip(jaxpr.constvars, closed.consts):
+    for v in jaxpr.constvars:
         tr.tensor_for(v, "const", is_input=True)
     tr.process(jaxpr)
     g = tr.g

@@ -142,7 +142,7 @@ def prune_pspec(shape: tuple, spec: P, mesh: Mesh) -> P:
     cannot shard over model=16 — it falls back to replicated)."""
     parts = list(spec) + [None] * (len(shape) - len(spec))
     out = []
-    for dim, part in zip(shape, parts):
+    for dim, part in zip(shape, parts, strict=False):
         if part is None:
             out.append(None)
             continue

@@ -38,7 +38,7 @@ def materialize(spec_tree, rng: jax.Array):
     leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_pspec)
     keys = jax.random.split(rng, len(leaves))
     outs = []
-    for spec, key in zip(leaves, keys):
+    for spec, key in zip(leaves, keys, strict=True):
         if spec.init == "zeros":
             outs.append(jnp.zeros(spec.shape, spec.dtype))
         elif spec.init == "ones":

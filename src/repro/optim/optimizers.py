@@ -14,7 +14,7 @@ API: ``opt.init(params) -> state``;
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -168,7 +168,7 @@ def adafactor(lr=3e-4, decay: float = 0.8, eps: float = 1e-30,
         flat_p, tp = jax.tree.flatten(params)
         flat_g = jax.tree.leaves(grads)
         flat_f = tp.flatten_up_to(state["f"])
-        outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f, strict=True)]
         new_params = jax.tree.unflatten(tp, [o[0] for o in outs])
         new_f = jax.tree.unflatten(tp, [o[1] for o in outs])
         return new_params, {"f": new_f, "count": count}
@@ -243,7 +243,7 @@ def galore_adamw(lr=3e-4, rank: int = 64, b1: float = 0.9, b2: float = 0.95,
         flat_p, tdef = jax.tree.flatten(params)
         flat_g = jax.tree.leaves(grads)
         flat_s = tdef.flatten_up_to(state["s"])
-        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s, strict=True)]
         return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
                 {"s": jax.tree.unflatten(tdef, [o[1] for o in outs]),
                  "count": count})

@@ -41,10 +41,10 @@ def test_knapsack_exact_vs_bruteforce(tg):
     # brute force
     best = None
     for mask in itertools.product([0, 1], repeat=len(acts)):
-        mem = sum(mi for mi, x in zip(m, mask) if x)
+        mem = sum(mi for mi, x in zip(m, mask, strict=True) if x)
         if mem > budget:
             continue
-        cost = sum(ri for ri, x in zip(r, mask) if not x)
+        cost = sum(ri for ri, x in zip(r, mask, strict=True) if not x)
         if best is None or cost < best:
             best = cost
     assert rc == best

@@ -153,8 +153,8 @@ def test_searched_best_dominates_unfused_baseline(hda):
     # front is mutually non-dominated on the objective tuple
     for c in res.pareto:
         assert not any(
-            all(a <= b for a, b in zip(o.objectives, c.objectives))
-            and any(a < b for a, b in zip(o.objectives, c.objectives))
+            all(a <= b for a, b in zip(o.objectives, c.objectives, strict=True))
+            and any(a < b for a, b in zip(o.objectives, c.objectives, strict=True))
             for o in res.pareto if o is not c)
 
 

@@ -62,7 +62,7 @@ def test_flash_grads_match_ref(H, Kv):
 
     g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
     gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(g, gr):
+    for a, b in zip(g, gr, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
 
 
@@ -102,7 +102,7 @@ def test_fused_adam_sweep(n, count):
                          weight_decay=0.01)
     rout = ref.fused_adam_ref(p, g, m, v, lr=1e-3, weight_decay=0.01,
                               count=count)
-    for a, b in zip(out, rout):
+    for a, b in zip(out, rout, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 

@@ -72,7 +72,7 @@ def test_tensor_categories(tg):
     # forward products are activations, backward products gradients
     for a in tg.activations:
         assert cats[a] == ACTIVATIONS
-    for p, dg in tg.param_grads.items():
+    for dg in tg.param_grads.values():
         assert cats[dg] == GRADIENTS
     # optimizer outputs that are not states (p.next) are workspace
     some_param = next(iter(tg.param_grads))
@@ -260,7 +260,7 @@ def test_fusion_sram_constraint_uses_memory_model(hda):
     tilings = [4, 8, 1]
     tmin = min(t for t in tilings if t > 1)
     legacy = sum(b / max(1, tmin if t > 1 else 1)
-                 for b, t in zip(nbytes, tilings))
+                 for b, t in zip(nbytes, tilings, strict=True))
     assert tile_working_set(nbytes, tilings) == legacy
 
 

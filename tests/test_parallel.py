@@ -217,7 +217,7 @@ def test_parallel_engine_parity(rn_tg, strat, make_cluster):
     cached = evaluate_parallel(rn_tg, cl, strat)
     naive = evaluate_parallel(rn_tg, cl, strat, use_engine=False)
     assert_equal_results(cached, naive)
-    for rc, rn in zip(cached.stage_results, naive.stage_results):
+    for rc, rn in zip(cached.stage_results, naive.stage_results, strict=True):
         assert rc.latency == rn.latency
         assert rc.energy == rn.energy
         assert rc.per_core_busy == rn.per_core_busy
@@ -352,7 +352,7 @@ def test_pipeline_bubble_accounting(mlp_tg):
     def expected(r, m, pp):
         t_body = max(b.latency for b in r.body_results)
         tail = max(max(f.latency - b.latency, 0.0)
-                   for f, b in zip(r.stage_results, r.body_results))
+                   for f, b in zip(r.stage_results, r.body_results, strict=True))
         return (m + pp - 1) * t_body + tail
 
     assert r2.latency == expected(r2, 2, 2)

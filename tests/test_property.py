@@ -16,10 +16,12 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 pytestmark = pytest.mark.slow
 
 from repro.core import (ActivationPolicy, FusionConfig, GraphBuilder,
-                        apply_policy, build_training_graph, edge_tpu,
-                        knapsack_baseline, manual_fusion, quotient_dag,
-                        schedule, solve_fusion, stored_activation_bytes,
-                        activation_set)
+                        ParallelStrategy, apply_policy, build_training_graph,
+                        edge_cluster, edge_tpu, knapsack_baseline,
+                        manual_fusion, parallelize, quotient_dag, schedule,
+                        solve_fusion, stored_activation_bytes, activation_set)
+from repro.core.engine import graph_sigs
+from repro.core.verify import verify_cache, verify_graph
 from repro.core.fusion import repair_partition
 from repro.core.nsga2 import crowding_distance, fast_non_dominated_sort
 from repro.distributed.sharding import prune_pspec
@@ -134,6 +136,77 @@ def test_allocator_peak_bounds_and_offload_parity(widths, batch, policy_seed):
     assert sum(res.mem_breakdown.values()) == res.peak_mem
 
 
+@settings(max_examples=12, deadline=None)
+@given(widths=widths_st, batch=st.sampled_from([1, 4]),
+       policy_seed=st.integers(0, 9),
+       par=st.sampled_from([None, (2, 1, 1), (1, 2, 1), (1, 1, 2)]))
+def test_verifier_clean_after_random_mutations(widths, batch, policy_seed,
+                                               par):
+    """Random mutation chains through copy / replace_tensor / retune_node /
+    rename_tensor_for (the policy rewrites) and parallelize always verify
+    clean — both the M-rules and the incremental signature caches."""
+    tg = build_training_graph(random_mlp(widths, batch))
+    rng = np.random.default_rng(policy_seed)
+    acts = activation_set(tg)
+    pol = {a: ActivationPolicy(int(rng.integers(0, 3))) for a in acts}
+    g2 = apply_policy(tg, pol)
+    hda = edge_tpu()
+    assert verify_graph(g2) == []
+    assert verify_cache(g2, hda) == []
+    if par is not None:
+        dp, tp, pp = par
+        strat = ParallelStrategy(dp, tp, pp, microbatches=2)
+        plan = parallelize(tg, strat, edge_cluster(strat.chips))
+        from repro.core.verify import verify_parallel
+        assert verify_parallel(tg, plan) == []
+        for sg in plan.stage_graphs:
+            assert verify_graph(sg) == []
+            assert verify_cache(sg, hda) == []
+
+
+@settings(max_examples=12, deadline=None)
+@given(widths=widths_st, batch=st.sampled_from([1, 4]),
+       seed=st.integers(0, 99),
+       kind=st.sampled_from(["drop_edge", "flip_bytes", "producer",
+                             "sig_drift", "macs"]))
+def test_seeded_corruptions_always_caught(widths, batch, seed, kind):
+    """Seeded corruptions are always caught by the *matching* rule code:
+    a dropped consumer edge → M002, a flipped cached byte count → C002,
+    a producer-map tamper → M003, a signature tamper → C001, a MAC-total
+    tamper → C008."""
+    g = build_training_graph(random_mlp(widths, batch)).graph
+    rng = np.random.default_rng(seed)
+    hda = edge_tpu()
+
+    def pick(items):
+        items = sorted(items)
+        return items[int(rng.integers(0, len(items)))]
+
+    if kind == "drop_edge":
+        t = pick(t for t, cs in g.consumers.items() if cs)
+        g.consumers[t] = list(g.consumers[t])[:-1]
+        want, fs = "M002", verify_graph(g)
+    elif kind == "producer":
+        t = pick(g.producer)
+        g.producer[t] = "ghost"
+        want, fs = "M003", verify_graph(g)
+    elif kind == "flip_bytes":
+        sigs = graph_sigs(g)
+        t = pick(sigs.tb)
+        sigs.tb[t] = sigs.tb[t] + int(rng.integers(1, 64))
+        want, fs = "C002", verify_cache(g, hda)
+    elif kind == "sig_drift":
+        sigs = graph_sigs(g)
+        n = pick(sigs.sid)
+        sigs.sid[n] = sigs.sid[n] + 999_983
+        want, fs = "C001", verify_cache(g, hda)
+    else:
+        sigs = graph_sigs(g)
+        sigs.macs_total += int(rng.integers(1, 100))
+        want, fs = "C008", verify_cache(g, hda)
+    assert want in {f.rule for f in fs}
+
+
 @settings(max_examples=20, deadline=None)
 @given(n=st.integers(2, 40), m=st.integers(2, 4), seed=st.integers(0, 99))
 def test_nds_front_is_nondominated(n, m, seed):
@@ -162,7 +235,7 @@ def test_prune_pspec_divisibility(dims):
     mesh = Mesh(np.array(devs[:1]).reshape(1, 1), ("data", "model"))
     spec = P(*(["data", "model"] + [None] * (len(dims) - 2))[: len(dims)])
     pruned = prune_pspec(tuple(dims), spec, mesh)
-    for d, part in zip(dims, tuple(pruned) + (None,) * len(dims)):
+    for d, part in zip(dims, tuple(pruned) + (None,) * len(dims), strict=False):
         if part is None:
             continue
         axes = part if isinstance(part, tuple) else (part,)

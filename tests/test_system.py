@@ -53,7 +53,7 @@ def test_inference_vs_training_hardware_ranking_differs():
         tr_lat.append(schedule(tg, hda).latency)
     # the train/inference latency ratio is config-dependent (structurally
     # different landscapes, Fig. 1) — not a constant scaling
-    ratios = [t / i for t, i in zip(tr_lat, inf_lat)]
+    ratios = [t / i for t, i in zip(tr_lat, inf_lat, strict=True)]
     assert max(ratios) / min(ratios) > 1.05
 
 

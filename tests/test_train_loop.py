@@ -201,7 +201,7 @@ def test_chunked_loss_equals_unchunked(cfg):
     l0, g0 = run(None)
     l1, g1 = run(16)
     np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
-    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1), strict=True):
         # grads are stored in bf16: equal to within one ulp
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
@@ -237,6 +237,6 @@ def test_grad_accum_equivalence(cfg):
         p2, _, m = step(jax.tree.map(jnp.copy, params), opt.init(params),
                         batch, jnp.int32(0))
         outs[ga] = p2
-    for a, b in zip(jax.tree.leaves(outs[1]), jax.tree.leaves(outs[2])):
+    for a, b in zip(jax.tree.leaves(outs[1]), jax.tree.leaves(outs[2]), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=3e-2)

@@ -1,0 +1,514 @@
+"""Model-invariant verifier tests (src/repro/core/verify.py).
+
+Two halves, per the ISSUE-6 acceptance bars:
+
+* clean graphs/schedules/caches produce zero findings across the policy
+  and parallelism rewrites;
+* every rule code fires on a seeded violation (direct dict/field surgery
+  that bypasses the mutator API, exactly the corruption class the
+  verifier exists to catch).
+"""
+
+import dataclasses
+import os
+
+import pytest
+
+from repro.core import (ActivationPolicy, Node, ParallelStrategy, TensorSpec,
+                        apply_policy, build_training_graph, edge_cluster,
+                        edge_tpu, evaluate_parallel, evaluate_policy,
+                        ga_policy, get_engine, manual_fusion, mlp_graph,
+                        parallelize, schedule, search_fusion, sweep,
+                        uniform_policy)
+from repro.core.engine import EvalEngine, graph_sigs
+from repro.core.fusion import repair_partition
+from repro.core.verify import (RULES, Finding, VerificationError,
+                               sanitize_enabled, verify_cache, verify_graph,
+                               verify_parallel, verify_result,
+                               verify_schedule, _verify_timeline)
+
+
+@pytest.fixture(scope="module")
+def hda():
+    return edge_tpu()
+
+
+@pytest.fixture(scope="module")
+def tg():
+    return build_training_graph(mlp_graph(batch=8, widths=(32, 32)), "adam")
+
+
+def fresh_tg():
+    return build_training_graph(mlp_graph(batch=8, widths=(32, 32)), "adam")
+
+
+def codes(findings):
+    return {f.rule for f in findings}
+
+
+def errors(findings):
+    return [f for f in findings if f.severity == "error"]
+
+
+# ---------------------------------------------------------------------------
+# registry / plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_rule_registry_shape():
+    assert len(RULES) >= 25
+    for code, desc in RULES.items():
+        assert code[0] in "MSC" and code[1:].isdigit() and len(code) == 4
+        assert desc
+    f = Finding("M001", "error", "t0", "boom")
+    assert "M001" in str(f) and "t0" in str(f)
+
+
+def test_sanitize_toggle(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+
+
+def test_verification_error_carries_findings():
+    fs = [Finding("C001", "error", "n", "drift")]
+    err = VerificationError(fs)
+    assert err.findings == fs and "C001" in str(err)
+
+
+# ---------------------------------------------------------------------------
+# clean paths: zero findings
+# ---------------------------------------------------------------------------
+
+
+def test_clean_training_graph(tg, hda):
+    assert verify_graph(tg.graph) == []
+    assert verify_cache(tg.graph, hda) == []
+
+
+def test_clean_policies_verify_clean(tg, hda):
+    eng = get_engine(hda)
+    for pol in (ActivationPolicy.KEEP, ActivationPolicy.RECOMPUTE,
+                ActivationPolicy.OFFLOAD):
+        g2 = apply_policy(tg, uniform_policy(tg, pol))
+        part, quotient = repair_partition(g2, manual_fusion(g2),
+                                          return_quotient=True)
+        res = schedule(g2, hda, part, engine=eng, quotient=quotient)
+        assert verify_result(g2, hda, part, res, engine=eng,
+                             strict=True) == []
+
+
+def test_clean_parallel_plan(tg):
+    strat = ParallelStrategy(2, 2, 2, microbatches=4)
+    cluster = edge_cluster(strat.chips)
+    plan = parallelize(tg, strat, cluster)
+    assert verify_parallel(tg, plan) == []
+    res = evaluate_parallel(tg, cluster, strat)
+    assert res.findings == []
+
+
+def test_search_and_ga_attach_findings(tg, hda):
+    from repro.core import FusionSearchConfig
+    r = search_fusion(tg.graph, hda,
+                      FusionSearchConfig(pop_size=6, generations=2))
+    assert r.findings == []
+    sol = evaluate_policy(tg, hda, {}, verify=True)
+    assert sol.findings == []
+    sol2 = evaluate_policy(tg, hda, {})
+    assert sol2.findings == []       # opt-in: off by default
+    pr = ga_policy(tg, hda, pop_size=6, generations=2)
+    assert pr.baseline.findings == []
+    assert all(s.findings == [] for s in pr.pareto)
+
+
+def test_sweep_attaches_findings_to_winner(hda):
+    pts = sweep(edge_tpu, {"x_pes": [4, 8], "y_pes": [4]},
+                {"mlp": mlp_graph()})
+    with_f = [p for p in pts if p.findings]
+    assert len(with_f) == 1                      # exactly the winner
+    assert with_f[0].findings["mlp"] == []
+
+
+# ---------------------------------------------------------------------------
+# seeded corruptions: each M00x rule fires
+# ---------------------------------------------------------------------------
+
+
+def test_m001_dangling_consumer():
+    g = fresh_tg().graph
+    t = next(t for t, cs in g.consumers.items() if cs)
+    g.consumers[t] = list(g.consumers[t]) + ["ghost_node"]
+    assert "M001" in codes(verify_graph(g))
+    with pytest.raises(Exception, match="stale consumer|not a node|"
+                                        "consumer"):
+        g.validate()
+
+
+def test_m001_stale_extra_entry():
+    g = fresh_tg().graph
+    t = next(t for t, cs in g.consumers.items() if cs)
+    g.consumers[t] = list(g.consumers[t]) * 2    # each consumer listed twice
+    assert "M001" in codes(verify_graph(g))
+
+
+def test_m002_missing_consumer_entry():
+    g = fresh_tg().graph
+    t = next(t for t, cs in g.consumers.items() if cs)
+    g.consumers[t] = list(g.consumers[t])[:-1]   # drop one edge
+    assert "M002" in codes(verify_graph(g))
+    with pytest.raises(Exception, match="stale consumer"):
+        g.validate()
+
+
+def test_m003_producer_mismatch():
+    g = fresh_tg().graph
+    t = next(iter(g.producer))
+    g.producer[t] = "ghost_node"
+    assert "M003" in codes(verify_graph(g))
+    with pytest.raises(Exception, match="producer"):
+        g.validate()
+
+
+def test_m004_orphan_tensor():
+    g = fresh_tg().graph
+    g.add_tensor(TensorSpec("orphan", (4, 4)))
+    fs = verify_graph(g)
+    assert "M004" in codes(fs)
+    assert errors(fs) == []                      # convention rule: warning
+
+
+def test_m005_adjacency_cache_drift():
+    g = fresh_tg().graph
+    g.adjacency()                                # build + cache
+    name = g.topo_order()[0]
+    g._adj[1][name] = ["ghost_pred"]             # corrupt cached preds
+    assert "M005" in codes(verify_graph(g))
+
+
+def test_m006_topo_cache_drift():
+    g = fresh_tg().graph
+    order = g.topo_order()
+    g._topo = (g._version, list(reversed(order)))
+    assert "M006" in codes(verify_graph(g))
+
+
+def test_m007_cycle():
+    g = fresh_tg().graph
+    # legal API calls that close a cycle: a->b and b->a
+    g.tensor("cyc_a", (4,))
+    g.tensor("cyc_b", (4,))
+    g.add_node(Node("cyc1", "relu", "fwd", {"N": 4}, ["cyc_b"], ["cyc_a"], 8))
+    g.add_node(Node("cyc2", "relu", "fwd", {"N": 4}, ["cyc_a"], ["cyc_b"], 8))
+    assert "M007" in codes(verify_graph(g))
+
+
+def test_m020_bwd_flop_drift():
+    g = fresh_tg().graph
+    name = next(n for n, nd in g.nodes.items()
+                if nd.op == "gemm_bwd_weight")
+    g.retune_node(name, flops=g.nodes[name].flops + 2)
+    fs = verify_graph(g)
+    assert "M020" in codes(fs)
+    assert "M021" in codes(fs)                   # formula breaks too
+
+
+def test_m021_formula_drift():
+    g = fresh_tg().graph
+    name = next(n for n, nd in g.nodes.items() if nd.op == "gemm")
+    g.retune_node(name, flops=g.nodes[name].flops + 2)
+    assert "M021" in codes(verify_graph(g))
+
+
+def test_m022_recompute_drift(tg):
+    g = apply_policy(tg, uniform_policy(tg, ActivationPolicy.RECOMPUTE))
+    name = next(n for n, nd in g.nodes.items() if nd.kind == "recompute")
+    g.retune_node(name, flops=g.nodes[name].flops + 2)
+    assert "M022" in codes(verify_graph(g))
+
+
+def test_m023_dma_imbalance(tg):
+    g = apply_policy(tg, uniform_policy(tg, ActivationPolicy.OFFLOAD))
+    name = next(n for n, nd in g.nodes.items() if nd.op == "fetch")
+    dims = dict(g.nodes[name].dims)
+    dims["N"] += 7                               # flip the byte count
+    g.retune_node(name, dims=dims)
+    assert "M023" in codes(verify_graph(g))
+
+
+def test_m024_dropped_activation():
+    g = fresh_tg().graph
+    # silently drop a fwd activation's bwd consumers (dict surgery)
+    t = next(t for t, p in g.producer.items()
+             if g.nodes[p].kind == "fwd" and g.consumers.get(t))
+    for c in list(g.consumers[t]):
+        nd = g.nodes[c]
+        nd.inputs = [x for x in nd.inputs if x != t]
+    g.consumers[t] = []
+    fs = verify_graph(g)
+    assert "M024" in codes(fs)
+    assert all(f.severity == "warning" for f in fs if f.rule == "M024")
+
+
+# ---------------------------------------------------------------------------
+# seeded corruptions: M03x parallel symmetry
+# ---------------------------------------------------------------------------
+
+
+def plan_for(tg, strat=None):
+    strat = strat or ParallelStrategy(2, 2, 2, microbatches=4)
+    cluster = edge_cluster(strat.chips)
+    return parallelize(tg, strat, cluster)
+
+
+def test_m030_collective_degree(tg):
+    plan = plan_for(tg)
+    sg, name = next(
+        (sg, n) for sg in plan.stage_graphs for n, nd in sg.nodes.items()
+        if nd.op == "all_reduce" and nd.outputs
+        and nd.outputs[0].endswith(".tpar"))
+    dims = dict(sg.nodes[name].dims)
+    dims["P"] = 3                                # tp group is 2
+    sg.retune_node(name, dims=dims)
+    assert "M030" in codes(verify_parallel(tg, plan))
+
+
+def test_m031_send_recv_asymmetry(tg):
+    plan = plan_for(tg)
+    sg = plan.stage_graphs[1]
+    name = next(n for n in sg.nodes if n.startswith("recv:"))
+    nd = sg.nodes.pop(name)                      # drop the recv node
+    for t in nd.outputs:
+        sg.producer.pop(t, None)
+    assert "M031" in codes(verify_parallel(tg, plan))
+
+
+def test_m032_shard_imbalance(tg):
+    plan = plan_for(tg)
+    w = next(iter(plan.sharded_params))
+    for sg in plan.stage_graphs:
+        spec = sg.tensors.get(w)
+        if spec is not None:
+            sg.replace_tensor(dataclasses.replace(
+                spec, shape=tuple(s * 2 for s in spec.shape)))
+    assert "M032" in codes(verify_parallel(tg, plan))
+
+
+# ---------------------------------------------------------------------------
+# seeded corruptions: S00x schedule legality
+# ---------------------------------------------------------------------------
+
+
+def sched_of(tg, hda, eng=None):
+    g = tg.graph
+    part = [(n,) for n in g.topo_order()]
+    res = schedule(g, hda, part, engine=eng)
+    return g, part, res
+
+
+def test_s001_partition_cover(tg, hda):
+    g, part, res = sched_of(tg, hda)
+    assert "S001" in codes(verify_schedule(g, hda, part[:-1], res))
+    assert "S001" in codes(verify_schedule(g, hda, part + [part[0]], res))
+
+
+def test_s002_cyclic_quotient(tg, hda):
+    g, part, res = sched_of(tg, hda)
+    order = g.topo_order()
+    # group {first, last} with everything else singleton: non-convex
+    bad = [(order[0], order[-1])] + [(n,) for n in order[1:-1]]
+    assert "S002" in codes(verify_schedule(g, hda, bad, res))
+
+
+def test_s003_s004_race_detector():
+    out = []
+    # two intervals overlap on one resource; dependency 0->1 violated
+    events = [("mac", 0.0, 10.0, 0), ("mac", 5.0, 15.0, 1)]
+    _verify_timeline(events, [(0, 1)], [0.0, 5.0], [10.0, 15.0], out)
+    assert "S003" in codes(out)
+    assert "S004" in codes(out)
+    out2 = []
+    events = [("mac", 0.0, 10.0, 0), ("mac", 10.0, 15.0, 1)]
+    _verify_timeline(events, [(0, 1)], [0.0, 10.0], [10.0, 15.0], out2)
+    assert out2 == []                            # back-to-back is legal
+
+
+def test_s005_memory_tamper(tg, hda):
+    g, part, res = sched_of(tg, hda)
+    bad = dataclasses.replace(res, peak_mem=res.peak_mem + 64,
+                              mem_breakdown=dict(res.mem_breakdown))
+    assert "S005" in codes(verify_schedule(g, hda, part, bad))
+
+
+def test_s006_latency_tamper(tg, hda):
+    g, part, res = sched_of(tg, hda)
+    bad = dataclasses.replace(res, latency=res.latency * 1.5)
+    assert "S006" in codes(verify_schedule(g, hda, part, bad))
+
+
+def test_s007_spill_tamper(tg, hda):
+    g2 = apply_policy(tg, uniform_policy(tg, ActivationPolicy.OFFLOAD))
+    part, quotient = repair_partition(g2, manual_fusion(g2),
+                                      return_quotient=True)
+    res = schedule(g2, hda, part, quotient=quotient)
+    assert res.spill_bytes > 0
+    bad = dataclasses.replace(res, spill_bytes=res.spill_bytes + 2)
+    assert "S007" in codes(verify_schedule(g2, hda, part, bad))
+
+
+def test_clean_schedule_all_rules_quiet(tg, hda):
+    g, part, res = sched_of(tg, hda)
+    assert verify_schedule(g, hda, part, res) == []
+
+
+# ---------------------------------------------------------------------------
+# seeded corruptions: C00x engine cache coherence
+# ---------------------------------------------------------------------------
+
+
+def test_c001_signature_drift(hda):
+    g = fresh_tg().graph
+    sigs = graph_sigs(g)
+    name = g.topo_order()[0]
+    sigs.sid[name] = sigs.sid[name] + 999_983
+    assert "C001" in codes(verify_cache(g, hda))
+
+
+def test_c002_byte_table_drift(hda):
+    g = fresh_tg().graph
+    sigs = graph_sigs(g)
+    t = next(iter(sigs.tb))
+    sigs.tb[t] = sigs.tb[t] + 8
+    assert "C002" in codes(verify_cache(g, hda))
+
+
+def test_c003_static_drift(hda):
+    g = fresh_tg().graph
+    sigs = graph_sigs(g)
+    sigs.static += 4096
+    assert "C003" in codes(verify_cache(g, hda))
+
+
+def test_c004_category_drift(hda):
+    g = fresh_tg().graph
+    sigs = graph_sigs(g)
+    t = next(iter(sigs.cat))
+    sigs.cat[t] = (sigs.cat[t] + 1) % 6
+    assert "C004" in codes(verify_cache(g, hda))
+
+
+def test_c005_fingerprint_drift(hda):
+    g = fresh_tg().graph
+    sigs = graph_sigs(g)
+    name = g.topo_order()[0]
+    e = sigs.fp_entry[name]
+    corrupt = (e[0], e[1], e[2] + 999_983) + e[3:]
+    sigs.fp_entry[name] = corrupt
+    sigs._fp = None
+    fs = verify_cache(g, hda)
+    assert "C005" in codes(fs)
+    assert "C001" in codes(fs)                   # the entry itself drifted
+
+
+def test_c006_dirty_leak(hda):
+    g = fresh_tg().graph
+    graph_sigs(g)                                # tables now clean
+    g._dirty_nodes.add(g.topo_order()[0])        # leak without version bump
+    assert "C006" in codes(verify_cache(g, hda))
+
+
+def test_c006_adjacency_dirty_at_clean_version(hda):
+    g = fresh_tg().graph
+    g.adjacency()
+    graph_sigs(g)
+    g._adj_dirty.add(g.topo_order()[0])
+    fs = verify_cache(g, hda)
+    assert "C006" in codes(fs)
+    with pytest.raises(Exception, match="adjacency cache"):
+        g.validate()
+
+
+def test_c007_partition_sig_drift(hda):
+    g = fresh_tg().graph
+    eng = EvalEngine(hda)
+    part = [(n,) for n in g.topo_order()]
+    bound = eng.bind(g)
+    bound.partition_sig(part)                    # populate sid table
+    sigs = graph_sigs(g)
+    name = part[0][0]
+    sigs.sid[name] = sigs.sid[name] + 999_983
+    fs = verify_cache(g, engine=eng, partition=part)
+    assert "C007" in codes(fs)
+    assert "C001" in codes(fs)
+
+
+def test_c008_macs_drift(hda):
+    g = fresh_tg().graph
+    sigs = graph_sigs(g)
+    sigs.macs_total += 1
+    assert "C008" in codes(verify_cache(g, hda))
+
+
+# ---------------------------------------------------------------------------
+# sanitizer mode end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_sanitizer_raises_on_corrupt_cache(tg, hda, monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    g = tg.graph.copy()
+    eng = EvalEngine(hda)
+    sigs = graph_sigs(g)
+    name = g.topo_order()[0]
+    sigs.sid[name] = sigs.sid[name] + 999_983
+    sigs.fp_entry[name] = (name, "fwd", sigs.sid[name], (), ())
+    sigs._fp = None
+    with pytest.raises(VerificationError):
+        schedule(g, hda, engine=eng)
+
+
+def test_sanitizer_off_keeps_schedule_quiet(tg, hda, monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    g = tg.graph.copy()
+    eng = EvalEngine(hda)
+    sigs = graph_sigs(g)
+    name = g.topo_order()[0]
+    sigs.sid[name] = sigs.sid[name] + 999_983
+    sigs.fp_entry[name] = (name, "fwd", sigs.sid[name], (), ())
+    sigs._fp = None
+    schedule(g, hda, engine=eng)                 # no raise without the flag
+
+
+def test_strict_overrides_env(tg, hda, monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    g = tg.graph.copy()
+    sigs = graph_sigs(g)
+    name = g.topo_order()[0]
+    sigs.sid[name] = sigs.sid[name] + 999_983
+    with pytest.raises(VerificationError):
+        verify_result(g, hda, strict=True)
+    fs = verify_result(g, hda, strict=False)
+    assert "C001" in codes(fs)
+
+
+# ---------------------------------------------------------------------------
+# the rename_tensor_for duplicate-input fix (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_rename_tensor_for_duplicate_inputs():
+    from repro.core import WorkloadGraph
+    g = WorkloadGraph("dup")
+    g.tensor("x", (4,), is_input=True)
+    g.tensor("y", (4,))
+    g.tensor("z", (4,))
+    g.add_node(Node("sq", "mul", "fwd", {"N": 4}, ["x", "x"], ["y"], 4))
+    g.add_node(Node("id", "relu", "fwd", {"N": 4}, ["x"], ["z"], 4))
+    g.rename_tensor_for("sq", "x", "z")
+    assert g.nodes["sq"].inputs == ["z", "z"]
+    assert g.consumers["x"] == ["id"]            # both entries rewired
+    assert sorted(g.consumers["z"]) == ["sq", "sq"]
+    g.validate()
+    assert verify_graph(g) == []
