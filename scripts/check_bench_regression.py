@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import subprocess
 import sys
@@ -41,6 +42,8 @@ HOT_PATHS = {
     "fig9_gpt2_fusemax_dse": "fig9",
     "fig12_ac_ga_pareto": "fig12",
     "fusion_search_resnet": "fusion_search",
+    "resilience_goodput": "resilience",
+    "resilience_degrade": "resilience",
 }
 
 
@@ -52,12 +55,24 @@ def load(path: str) -> dict:
         return {}
 
 
-def us_of(record: dict, name: str) -> float | None:
+def us_of(record: dict, name: str) -> tuple[float | None, str | None]:
+    """(value, None) when the entry is usable, else (None, skip reason).
+
+    A corrupted record (a crashed run writing NaN, a partial merge dropping
+    ``us_per_call``) must degrade to a structured skip, never a crash or a
+    silent never-failing comparison — ``nan > x`` is False for every x."""
     entry = record.get(name)
     if not isinstance(entry, dict):
-        return None
+        return None, "missing"
     v = entry.get("us_per_call")
-    return float(v) if isinstance(v, (int, float)) else None
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return None, "missing" if v is None else "non_numeric"
+    v = float(v)
+    if math.isnan(v):
+        return None, "nan"
+    if not math.isfinite(v) or v <= 0:
+        return None, "non_positive"
+    return v, None
 
 
 def rerun(target: str) -> None:
@@ -91,7 +106,8 @@ def main() -> int:
     args = ap.parse_args()
 
     summary: dict = dict(status="ok", max_ratio=args.max_ratio,
-                         floor_us=args.floor_us, checked=[], failures=[])
+                         floor_us=args.floor_us, checked=[], failures=[],
+                         skipped=[])
 
     def finish(status: str, code: int, message: str) -> int:
         summary["status"] = status
@@ -128,14 +144,22 @@ def main() -> int:
 
     current = load(args.current)
     for name, target in sorted(HOT_PATHS.items()):
-        b = us_of(base, name)
-        c = us_of(current, name)
-        if b is None or c is None or b < args.floor_us:
+        b, b_why = us_of(base, name)
+        c, c_why = us_of(current, name)
+        if b is None or c is None:
+            summary["skipped"].append(dict(
+                name=name,
+                reason=f"baseline_{b_why}" if b is None
+                else f"current_{c_why}"))
+            continue
+        if b < args.floor_us:
+            summary["skipped"].append(dict(name=name, reason="below_floor",
+                                           baseline_us=b))
             continue
         if c > b * args.max_ratio and not args.no_rerun:
             rerun(target)              # confirm: min of two measurements
             current = load(args.current)
-            c2 = us_of(current, name)
+            c2, _ = us_of(current, name)
             if c2 is not None:
                 c = min(c, c2)
         entry = dict(name=name, baseline_us=b, current_us=c, ratio=c / b)
@@ -147,9 +171,17 @@ def main() -> int:
         return finish("failed", 1,
                       "bench guard FAILED (hot-path regression >"
                       f"{(args.max_ratio - 1) * 100:.0f}%):")
+    if not summary["checked"]:
+        # every guarded entry was missing/NaN/sub-floor: report the skip
+        # structurally instead of claiming a clean comparison
+        return finish("skipped", 0,
+                      f"bench guard: nothing compared — all "
+                      f"{len(summary['skipped'])} guarded entries skipped "
+                      f"(missing/NaN/sub-floor) [exit 0]")
     return finish("ok", 0,
                   f"bench guard OK ({len(summary['checked'])} of "
                   f"{len(HOT_PATHS)} hot-path entries compared, "
+                  f"{len(summary['skipped'])} skipped, "
                   f"threshold x{args.max_ratio:.2f})")
 
 

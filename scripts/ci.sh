@@ -43,6 +43,10 @@ fi
 if [[ "${CI_SKIP_SLOW:-0}" == "1" ]]; then
     # fast leg: everything not marked slow (markers in pyproject.toml)
     python -m pytest "${PYTEST_ARGS[@]}" -m "not slow"
+    # fault-injection campaign: every seeded corruption class must be
+    # caught by the verifier (repro.core.faultinject; docs/resilience.md)
+    python -m repro.core.faultinject --seed 0
+    echo "ci: fault-injection campaign green"
 else
     python -m pytest "${PYTEST_ARGS[@]}"
 fi

@@ -17,12 +17,19 @@ Layers:
   remat_policy                — MONET decision → real jax.checkpoint policy
   verify                      — model-invariant verifier + engine cache-
                                 coherence sanitizer (M/S/C rule codes)
+  resilience                  — fault models, goodput vs raw throughput,
+                                checkpoint-interval selection, degraded-mode
+                                rescheduling
+  faultinject                 — seeded corruption campaign against the
+                                verifier (framework robustness)
 """
 
 from .accelerators import (EDGE_TPU_SPACE, FUSEMAX_SPACE, TPU_V5E,
-                           ClusterSpec, CoreSpec, HDASpec, MemLevel,
-                           datacenter_cluster, edge_cluster, edge_tpu,
-                           fusemax, grid, tpu_v5e_like, with_interconnect)
+                           ClusterSpec, CoreSpec, FaultModel, HDASpec,
+                           MemLevel, datacenter_cluster,
+                           datacenter_fault_model, edge_cluster,
+                           edge_fault_model, edge_tpu, fusemax, grid,
+                           tpu_v5e_like, with_interconnect)
 from .builders import GraphBuilder
 from .checkpointing import (ACResult, ACSolution, PolicyResult,
                             PolicySolution, activation_set,
@@ -33,8 +40,11 @@ from .checkpointing import (ACResult, ACSolution, PolicyResult,
                             uniform_policy)
 from .cost_model import (CostModel, NodeCost, collective_wire, comm_cycles,
                          comm_node_cost, dma_cycles, dma_node_cost)
-from .dse import (DSEPoint, ParallelPoint, compute_resource, pareto_front,
-                  spread, sweep, sweep_parallel)
+from .dse import (DSEPoint, ParallelPoint, ResiliencePoint, compute_resource,
+                  pareto_front, spread, sweep, sweep_parallel,
+                  sweep_resilience)
+from .faultinject import FAULTS, FaultSpec, InjectionReport, inject, \
+    run_campaign
 from .engine import (EvalEngine, GraphSigs, clear_engines, get_engine,
                      graph_sigs)
 from .fusion import (FusionConfig, GroupChecker, enumerate_candidates,
@@ -51,18 +61,21 @@ from .memory import (MEM_CATEGORIES, ActivationPolicy, LifetimePlan,
                      lifetime_profile, local_capacity, schedule_priorities,
                      static_breakdown, tensor_category, tile_working_set)
 from .nsga2 import (NSGA2Result, crowding_distance, fast_non_dominated_sort,
-                    nsga2, nsga2_int)
+                    load_snapshot, nsga2, nsga2_int, save_snapshot)
 from .parallel import (ParallelPlan, ParallelResult, ParallelStrategy,
                        evaluate_parallel, ga_parallel, graph_wire_bytes,
-                       parallelize, strategy_space)
+                       nearest_strategy, parallelize, strategy_space)
 from .remat_policy import keepset_to_policy, policy_from_keep, resolve_remat
+from .resilience import (CheckpointPlan, DegradeResult, GoodputResult,
+                         degrade, evaluate_goodput,
+                         optimal_checkpoint_interval, resolve_fault)
 from .scheduling import ScheduleResult, quotient_dag, schedule
 from .trace import trace_fn, trace_model
 from .training_transform import (OPTIMIZERS, TrainingGraph,
                                  build_training_graph)
 from .verify import (RULES, Finding, VerificationError, sanitize_enabled,
-                     verify_cache, verify_graph, verify_parallel,
-                     verify_result, verify_schedule)
+                     verify_cache, verify_degrade, verify_graph,
+                     verify_parallel, verify_result, verify_schedule)
 from .zoo import gpt2_graph, mlp_graph, resnet18_graph
 
 __all__ = [k for k in dir() if not k.startswith("_")]

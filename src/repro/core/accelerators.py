@@ -279,17 +279,60 @@ def with_interconnect(hda: HDASpec, bw: float, latency: float,
 
 
 @dataclass(frozen=True)
+class FaultModel:
+    """Per-chip failure characteristics (resilience modeling,
+    ``repro.core.resilience``).
+
+    ``mtbf_hours`` is the mean time between *hard* failures of one chip —
+    the whole job restarts from the last checkpoint when any chip fails, so
+    a cluster of n chips has MTBF ``mtbf_hours / n``.  ``transient_per_hour``
+    is the per-chip rate of recoverable soft errors, each costing one
+    replayed step.  ``dma_stall_frac`` is the expected fractional inflation
+    of DMA busy cycles (retried/stalled transfers).  ``restart_s`` is the
+    reboot/reinit wall time after a hard failure, before checkpoint
+    read-back starts."""
+
+    mtbf_hours: float = 50_000.0
+    transient_per_hour: float = 0.0
+    dma_stall_frac: float = 0.0
+    restart_s: float = 60.0
+
+    @property
+    def mtbf_s(self) -> float:
+        return self.mtbf_hours * 3600.0
+
+    def cluster_mtbf_s(self, n_chips: int) -> float:
+        """Any-chip hard-failure MTBF for ``n_chips`` independent chips."""
+        return self.mtbf_s / max(n_chips, 1)
+
+
+def edge_fault_model() -> FaultModel:
+    """Edge boards: consumer-grade parts fail more often but reboot fast."""
+    return FaultModel(mtbf_hours=20_000.0, transient_per_hour=1e-4,
+                      dma_stall_frac=0.05, restart_s=10.0)
+
+
+def datacenter_fault_model() -> FaultModel:
+    """Datacenter chips: higher-grade silicon, but restart means rejoining
+    the pod (scheduler + reshard), and ECC surfaces more soft errors."""
+    return FaultModel(mtbf_hours=50_000.0, transient_per_hour=1e-3,
+                      dma_stall_frac=0.02, restart_s=120.0)
+
+
+@dataclass(frozen=True)
 class ClusterSpec:
     """``n_chips`` identical HDAs joined by an inter-chip interconnect.
 
     ``chip`` must carry the interconnect parameters (``ici_bw`` etc. — use
     :func:`with_interconnect`); ``mem_capacity`` is the per-chip off-chip
     memory ceiling fed to the feasibility check of parallel schedules
-    (0 = unconstrained)."""
+    (0 = unconstrained); ``fault`` attaches the per-chip failure model used
+    by goodput evaluation (None = ideal, failure-free machine)."""
 
     chip: HDASpec
     n_chips: int
     mem_capacity: int = 0            # bytes per chip, 0 = unlimited
+    fault: FaultModel | None = None
 
     @property
     def name(self) -> str:
@@ -302,7 +345,8 @@ class ClusterSpec:
 
 
 def edge_cluster(n_chips: int = 4, chip: HDASpec | None = None,
-                 topology: str = "ring", mem_mb: float = 512.0) -> ClusterSpec:
+                 topology: str = "ring", mem_mb: float = 512.0,
+                 fault: FaultModel | None = None) -> ClusterSpec:
     """Board-level cluster of Edge-TPU-class chips: PCB traces / PCIe-class
     interconnect (~4 B/cycle/chip at 1 GHz ≈ 4 GB/s, µs-scale latency)."""
     base = chip or edge_tpu()
@@ -311,12 +355,14 @@ def edge_cluster(n_chips: int = 4, chip: HDASpec | None = None,
                                topology=topology),
         n_chips=n_chips,
         mem_capacity=int(mem_mb * (1 << 20)),
+        fault=fault or edge_fault_model(),
     )
 
 
 def datacenter_cluster(n_chips: int = 8, chip: HDASpec | None = None,
                        topology: str = "ring",
-                       mem_gb: float = 16.0) -> ClusterSpec:
+                       mem_gb: float = 16.0,
+                       fault: FaultModel | None = None) -> ClusterSpec:
     """Pod-slice cluster of TPU-v5e-class chips: ICI links (~50 GB/s/link ≈
     53 B/cycle at 0.94 GHz, sub-µs latency), torus/ring topology."""
     base = chip or tpu_v5e_like()
@@ -326,4 +372,5 @@ def datacenter_cluster(n_chips: int = 8, chip: HDASpec | None = None,
                                topology=topology),
         n_chips=n_chips,
         mem_capacity=int(mem_gb * (1 << 30)),
+        fault=fault or datacenter_fault_model(),
     )

@@ -171,6 +171,65 @@ def sweep_parallel(workloads: dict, make_cluster, chip_counts,
     return points
 
 
+@dataclass
+class ResiliencePoint:
+    """One (chip count × strategy) cell of a goodput (failure-aware) sweep."""
+
+    n_chips: int
+    strategy: object                # ParallelStrategy
+    results: dict                   # workload name -> GoodputResult
+
+    def row(self) -> dict:
+        out = dict(chips=self.n_chips, strategy=self.strategy.label,
+                   dp=self.strategy.data, tp=self.strategy.tensor,
+                   pp=self.strategy.pipeline,
+                   microbatches=self.strategy.microbatches)
+        for wname, r in self.results.items():
+            for k, v in r.as_row().items():
+                out[f"{wname}_{k}"] = v
+        return out
+
+
+def sweep_resilience(workloads: dict, make_cluster, chip_counts,
+                     fault=None, strategies=None, fusion: str = "manual",
+                     microbatches: int | None = None) -> list:
+    """Failure-aware scale sweep: :func:`sweep_parallel` composed with the
+    fault model — every cell's ideal-machine estimate is deflated into
+    goodput via checkpoint-interval selection and expected replay
+    (``repro.core.resilience``, docs/resilience.md).
+
+    ``fault`` overrides the cluster-attached
+    :class:`~repro.core.accelerators.FaultModel` (None = whatever
+    ``make_cluster`` attaches).  The raw-vs-goodput spread across
+    ``chip_counts`` is the headline: edge single-chip cells are
+    MTBF-insensitive while datacenter-scale cells lose a growing fraction
+    to checkpoints and rework."""
+    from .parallel import evaluate_parallel, strategy_space
+    from .resilience import evaluate_goodput
+
+    points: list[ResiliencePoint] = []
+    for n in chip_counts:
+        cluster = make_cluster(n)
+        engine = get_engine(cluster.chip)
+        strats = strategies if strategies is not None else \
+            strategy_space(n, microbatches=microbatches)
+        for strat in strats:
+            if strat.chips != n:
+                continue
+            results = {}
+            try:
+                for wname, tg in workloads.items():
+                    r = evaluate_parallel(tg, cluster, strat, fusion=fusion,
+                                          engine=engine)
+                    results[wname] = evaluate_goodput(
+                        tg, cluster, strat, fault=fault, engine=engine,
+                        result=r)
+            except ValueError:
+                continue            # strategy inapplicable to this workload
+            points.append(ResiliencePoint(n, strat, results))
+    return points
+
+
 def pareto_front(points: list, metrics) -> list:
     """Non-dominated subset w.r.t. ``metrics``: callables point→float
     (minimize)."""

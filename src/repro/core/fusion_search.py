@@ -57,13 +57,24 @@ class FusionSearchConfig:
     """Search budget + constraint set.  ``objectives`` name
     :class:`~repro.core.scheduling.ScheduleResult` attributes (minimized);
     the first two must stay ``(latency, peak_mem)`` — the domination
-    report and ``best`` selection are defined on that plane."""
+    report and ``best`` selection are defined on that plane.
+
+    The snapshot/resume and budget fields mirror the
+    :func:`repro.core.nsga2.nsga2` kwargs of the same names: crash-resume
+    snapshots every ``snapshot_every`` generations, bit-for-bit continuation
+    from ``resume``, wall-clock / evaluation bounds returning the
+    best-so-far front (docs/resilience.md)."""
 
     pop_size: int = 24
     generations: int = 12
     seed: int = 0
     objectives: tuple = ("latency", "peak_mem", "energy")
     fusion: FusionConfig = field(default_factory=FusionConfig)
+    snapshot_every: int = 0
+    snapshot_path: str | None = None
+    resume: dict | str | None = None
+    max_seconds: float | None = None
+    max_evals: int | None = None
 
 
 @dataclass
@@ -269,7 +280,10 @@ def search_fusion(g: WorkloadGraph, hda: HDASpec,
             encode_partition(order, manual_fusion(g)),        # manual pattern
         ])
         ga = nsga2(ev, n - 1, pop_size=cfg.pop_size,
-                   generations=cfg.generations, seed=cfg.seed, init=init)
+                   generations=cfg.generations, seed=cfg.seed, init=init,
+                   snapshot_every=cfg.snapshot_every,
+                   snapshot_path=cfg.snapshot_path, resume=cfg.resume,
+                   max_seconds=cfg.max_seconds, max_evals=cfg.max_evals)
         for x in np.concatenate([ga.pareto_X, ga.X]):
             c = ev.candidate(x)
             cands.setdefault(c.partition, c)

@@ -9,9 +9,14 @@ in the tests.
 
 from __future__ import annotations
 
+import json
+import os
+import time
 from dataclasses import dataclass
 
 import numpy as np
+
+SNAPSHOT_FORMAT = "nsga2-snapshot-v1"
 
 
 def fast_non_dominated_sort(F: np.ndarray) -> list[np.ndarray]:
@@ -57,6 +62,44 @@ class NSGA2Result:
     pareto_X: np.ndarray
     pareto_F: np.ndarray
     history: list          # best-front hypervolume proxy per generation
+    generations_run: int = 0   # generations completed (resumed runs include
+    #                            the pre-crash ones; < requested when a
+    #                            wall-clock / eval budget stopped the search)
+    n_evals: int = 0           # evaluate() calls made by *this* run
+
+
+def save_snapshot(path: str, state: dict) -> None:
+    """Atomically persist a search snapshot (write-temp + rename) so a crash
+    mid-write can never leave a truncated file behind."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(state, f)
+    os.replace(tmp, path)
+
+
+def load_snapshot(path: str) -> dict:
+    with open(path) as f:
+        state = json.load(f)
+    if state.get("format") != SNAPSHOT_FORMAT:
+        raise ValueError(f"unrecognized snapshot format in {path!r}: "
+                         f"{state.get('format')!r}")
+    return state
+
+
+def _snapshot_state(X, F, rng, generation, history) -> dict:
+    """Everything needed to continue bit-for-bit: population, objectives,
+    per-generation history, and the PCG64 bit-generator state.  All values
+    are ints / floats, so JSON round-trips them exactly."""
+    return {
+        "format": SNAPSHOT_FORMAT,
+        "generation": int(generation),
+        "dtype": "bool" if X.dtype == np.bool_ else "int",
+        "X": X.tolist(),
+        "F": F.tolist(),
+        "history": [float(h) for h in history],
+        "rng_state": rng.bit_generator.state,
+    }
 
 
 def _rank_and_crowd(Fm: np.ndarray):
@@ -70,17 +113,46 @@ def _rank_and_crowd(Fm: np.ndarray):
 
 
 def _evolve(evaluate, X: np.ndarray, rng, generations: int,
-            p_crossover: float, crossover, mutate) -> NSGA2Result:
+            p_crossover: float, crossover, mutate,
+            snapshot_every: int = 0, snapshot_path: str | None = None,
+            resume: dict | str | None = None,
+            max_seconds: float | None = None,
+            max_evals: int | None = None) -> NSGA2Result:
     """Shared NSGA-II core: binary-tournament selection, elitist (μ+λ)
     survival with crowding truncation, and Pareto-front dedup.  The genome
     representation lives entirely in the ``crossover(a, b)`` / ``mutate(c)``
-    operators (both mutate in place, drawing from ``rng``)."""
-    pop_size, n_var = X.shape
-    F = np.array([evaluate(x) for x in X], dtype=float)
-    rank, crowd, _ = _rank_and_crowd(F)
-    history: list = []
+    operators (both mutate in place, drawing from ``rng``).
 
-    for _ in range(generations):
+    ``snapshot_every=k`` persists a crash-resume snapshot to
+    ``snapshot_path`` every k generations; ``resume`` (a snapshot dict or a
+    path to one) restores population + RNG state and continues the exact
+    run — the resumed front is bit-for-bit identical to the uninterrupted
+    one.  ``max_seconds`` / ``max_evals`` stop early and return the
+    best-so-far front; neither consumes RNG draws, so enabling them never
+    perturbs the search trajectory."""
+    t0 = time.monotonic()
+    n_evals = 0
+    if resume is not None:
+        state = load_snapshot(resume) if isinstance(resume, str) else resume
+        dtype = np.bool_ if state["dtype"] == "bool" else int
+        X = np.array(state["X"], dtype=dtype)
+        F = np.array(state["F"], dtype=float)
+        history = [float(h) for h in state["history"]]
+        start_gen = int(state["generation"])
+        rng.bit_generator.state = state["rng_state"]
+    else:
+        F = np.array([evaluate(x) for x in X], dtype=float)
+        n_evals = X.shape[0]
+        history = []
+        start_gen = 0
+    pop_size, n_var = X.shape
+    rank, crowd, _ = _rank_and_crowd(F)
+
+    for gen in range(start_gen, generations):
+        if max_seconds is not None and time.monotonic() - t0 >= max_seconds:
+            break                                   # budget: best-so-far
+        if max_evals is not None and n_evals + pop_size > max_evals:
+            break
         def pick():
             i, j = rng.integers(0, pop_size, 2)
             if (rank[i], -crowd[i]) <= (rank[j], -crowd[j]):
@@ -97,6 +169,7 @@ def _evolve(evaluate, X: np.ndarray, rng, generations: int,
                 children.append(c)
         C = np.array(children[:pop_size])
         CF = np.array([evaluate(c) for c in C], dtype=float)
+        n_evals += pop_size
 
         # elitist (μ+λ) survival
         XA = np.concatenate([X, C])
@@ -115,19 +188,26 @@ def _evolve(evaluate, X: np.ndarray, rng, generations: int,
         X, F = XA[idx], FA[idx]
         rank, crowd, _ = _rank_and_crowd(F)
         history.append(float(F[rank == 0].mean()))
+        if snapshot_every and (gen + 1) % snapshot_every == 0:
+            save_snapshot(snapshot_path or os.path.join(
+                "artifacts", "nsga2_snapshot.json"),
+                _snapshot_state(X, F, rng, gen + 1, history))
 
     fronts = fast_non_dominated_sort(F)
     pf = fronts[0]
     # dedupe identical objective rows on the front
     _, uniq = np.unique(F[pf].round(9), axis=0, return_index=True)
     pf = pf[np.sort(uniq)]
-    return NSGA2Result(X, F, X[pf], F[pf], history)
+    return NSGA2Result(X, F, X[pf], F[pf], history,
+                       generations_run=len(history), n_evals=n_evals)
 
 
 def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
           seed: int = 0, p_crossover: float = 0.9,
           p_mutation: float | None = None, init: np.ndarray | None = None,
-          ) -> NSGA2Result:
+          snapshot_every: int = 0, snapshot_path: str | None = None,
+          resume: dict | str | None = None, max_seconds: float | None = None,
+          max_evals: int | None = None) -> NSGA2Result:
     """``evaluate(mask: np.ndarray[bool]) -> tuple`` of objectives (minimize)."""
     rng = np.random.default_rng(seed)
     p_mut = p_mutation if p_mutation is not None else 1.0 / max(n_var, 1)
@@ -147,13 +227,19 @@ def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
         c[flip] = ~c[flip]
 
     return _evolve(evaluate, X, rng, generations, p_crossover,
-                   crossover, mutate)
+                   crossover, mutate, snapshot_every=snapshot_every,
+                   snapshot_path=snapshot_path, resume=resume,
+                   max_seconds=max_seconds, max_evals=max_evals)
 
 
 def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
               generations: int = 10, seed: int = 0,
               p_crossover: float = 0.9, p_mutation: float | None = None,
-              init: np.ndarray | None = None) -> NSGA2Result:
+              init: np.ndarray | None = None,
+              snapshot_every: int = 0, snapshot_path: str | None = None,
+              resume: dict | str | None = None,
+              max_seconds: float | None = None,
+              max_evals: int | None = None) -> NSGA2Result:
     """Integer-genome NSGA-II for categorical/mixed search spaces (chip count
     × parallelism strategy × checkpointing budget — see
     ``repro.core.parallel.ga_parallel`` — and the ternary activation-policy
@@ -186,4 +272,6 @@ def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
             c[flip] = rng.integers(lo[flip], hi[flip] + 1)
 
     return _evolve(evaluate, X, rng, generations, p_crossover,
-                   crossover, mutate)
+                   crossover, mutate, snapshot_every=snapshot_every,
+                   snapshot_path=snapshot_path, resume=resume,
+                   max_seconds=max_seconds, max_evals=max_evals)

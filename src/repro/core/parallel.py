@@ -667,12 +667,22 @@ def evaluate_parallel(tg: TrainingGraph, cluster: ClusterSpec,
 def ga_parallel(tg: TrainingGraph, make_cluster, chip_counts: list,
                 keep_fracs: tuple = (1.0, 0.75, 0.5, 0.25),
                 pop_size: int = 16, generations: int = 8, seed: int = 0,
-                fusion: str = "manual"):
+                fusion: str = "manual", snapshot_every: int = 0,
+                snapshot_path: str | None = None,
+                resume: dict | str | None = None,
+                max_seconds: float | None = None,
+                max_evals: int | None = None):
     """Joint search over (chip count × parallelism strategy × activation-
     checkpointing budget) with NSGA-II over an integer genome, minimizing
     (−throughput, energy, per-chip peak mem).  ``make_cluster(n)`` builds
     the ClusterSpec for ``n`` chips.  Returns (NSGA2Result, decode) where
-    ``decode(genome)`` yields the (cluster, strategy, keep_frac) triple."""
+    ``decode(genome)`` yields the (cluster, strategy, keep_frac) triple.
+
+    ``seed`` fixes the whole trajectory (same seed ⇒ identical fronts);
+    ``snapshot_every``/``snapshot_path``/``resume`` and
+    ``max_seconds``/``max_evals`` are forwarded to
+    :func:`repro.core.nsga2.nsga2_int` for crash-resumable, budget-bounded
+    search (docs/resilience.md)."""
     from .checkpointing import knapsack_baseline, stored_activation_bytes
     from .nsga2 import nsga2_int
 
@@ -717,5 +727,32 @@ def ga_parallel(tg: TrainingGraph, make_cluster, chip_counts: list,
         return out
 
     res = nsga2_int(evaluate, bounds, pop_size=pop_size,
-                    generations=generations, seed=seed)
+                    generations=generations, seed=seed,
+                    snapshot_every=snapshot_every,
+                    snapshot_path=snapshot_path, resume=resume,
+                    max_seconds=max_seconds, max_evals=max_evals)
     return res, decode
+
+
+def nearest_strategy(strategy: ParallelStrategy, n_chips: int,
+                     ) -> ParallelStrategy:
+    """The factorization of ``n_chips`` closest to ``strategy`` — used by
+    degraded-mode rescheduling (``repro.core.resilience.degrade``) to remap
+    a running job onto the survivor set.  Preference order: keep the tensor
+    degree (tp rewrites resize every weight shard), then the pipeline depth
+    (pp remaps stage boundaries), and let dp absorb the shrink; ties break
+    toward larger dp.  Microbatch count is preserved so step semantics
+    (gradient-accumulation factor) stay comparable."""
+    cands = strategy_space(n_chips, microbatches=strategy.microbatches)
+
+    def score(c: ParallelStrategy):
+        return (abs(c.tensor - strategy.tensor),
+                abs(c.pipeline - strategy.pipeline),
+                abs(c.data - strategy.data),
+                -c.data)
+
+    best = min(cands, key=score)
+    if strategy.zero and best.data > 1:
+        best = ParallelStrategy(best.data, best.tensor, best.pipeline,
+                                best.microbatches, zero=True)
+    return best

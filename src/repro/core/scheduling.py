@@ -45,6 +45,15 @@ class ScheduleResult:
     def mac_utilization(self) -> float:
         return self.total_macs / max(self.latency, 1.0)
 
+    @property
+    def ckpt_bytes(self) -> float:
+        """Checkpoint payload resident on this chip: the weights +
+        optimizer-state categories of the memory breakdown.  Both are
+        statically live for the whole iteration, so the at-peak breakdown
+        always carries their full footprint (``repro.core.resilience``)."""
+        return (self.mem_breakdown.get("weights", 0.0)
+                + self.mem_breakdown.get("optimizer_state", 0.0))
+
     def as_row(self) -> dict:
         row = dict(latency=self.latency, energy=self.energy,
                    offchip_bytes=self.offchip_bytes, peak_mem=self.peak_mem,

@@ -112,6 +112,9 @@ RULES = {
     "C007": "partition-sig drift: a partition signature differs from one "
             "recomputed from fresh node signatures",
     "C008": "macs drift: cached MAC totals differ from the node table",
+    "C009": "degrade incoherence: a degraded-mode (survivor-set) plan is "
+            "inconsistent with its strategy, or the degrade rewrite left "
+            "stale signature/adjacency caches on a stage graph",
 }
 
 
@@ -869,6 +872,42 @@ def verify_cache(graph: WorkloadGraph, hda=None, engine=None,
                 _f(out, "C007", f"groups {bad}",
                    "partition signature differs from one recomputed from "
                    "fresh node signatures")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# C009 — degrade coherence (resilience: docs/resilience.md)
+# ---------------------------------------------------------------------------
+
+
+def verify_degrade(tg, plan, survivors: int | None = None) -> list:
+    """Coherence of a degraded-mode (survivor-set) re-parallelization.
+
+    ``repro.core.resilience.degrade`` rides the engine's warm path: the
+    rewrite copies the training graph so signature tables carry over, and
+    only the rewrite delta is re-signed.  That is exactly where stale-cache
+    bugs would hide, so this pass (a) checks the survivor plan's strategy
+    actually factorizes the survivor count, (b) re-runs the parallel
+    symmetry scan (M030–M032), and (c) diffs every stage graph's inherited
+    caches against a from-scratch re-signing, reporting any drift under
+    C009 with the underlying C-rule in the message."""
+    out: list = []
+    n = survivors if survivors is not None else plan.cluster.n_chips
+    if plan.strategy.chips != n:
+        _f(out, "C009", plan.strategy.label,
+           f"survivor plan uses {plan.strategy.chips} chips but "
+           f"{n} chips survive")
+    if plan.cluster.n_chips != n:
+        _f(out, "C009", plan.cluster.name,
+           f"survivor cluster has {plan.cluster.n_chips} chips, "
+           f"expected {n}")
+    out += verify_parallel(tg, plan)
+    for i, sg in enumerate(plan.stage_graphs):
+        out += verify_graph(sg)
+        for f in verify_cache(sg):
+            _f(out, "C009", f.subject,
+               f"stage {i}: degrade rewrite left stale caches "
+               f"({f.rule}): {f.message}", severity=f.severity)
     return out
 
 

@@ -3,9 +3,11 @@
 
 Covers the acceptance matrix: ResNet-18 and a small GPT-2 training graph,
 each under ``fusion="search"`` and all three uniform activation policies
-(KEEP / RECOMPUTE / OFFLOAD), plus one dp/tp/pp parallel configuration.
-Prints every finding (rule id, severity, offending name) and exits
-non-zero if any is reported.
+(KEEP / RECOMPUTE / OFFLOAD), plus one dp/tp/pp parallel configuration and
+its degraded-mode (survivor-set) remap — the C009 coherence pass plus a
+zero-fresh-signings assertion that the degrade rewrite stayed on the
+engine's warm path.  Prints every finding (rule id, severity, offending
+name) and exits non-zero if any is reported.
 
 Options:
   --quick    verify a small MLP only (seconds instead of ~a minute)
@@ -17,12 +19,13 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.core import (ActivationPolicy, FusionSearchConfig,
-                        ParallelStrategy, build_training_graph, edge_cluster,
-                        edge_tpu, evaluate_parallel, get_engine, gpt2_graph,
-                        mlp_graph, parallelize, resnet18_graph, schedule,
-                        uniform_policy)
+from repro.core import (ActivationPolicy, Finding, FusionSearchConfig,
+                        ParallelStrategy, build_training_graph, degrade,
+                        edge_cluster, edge_tpu, evaluate_parallel, get_engine,
+                        gpt2_graph, mlp_graph, parallelize, resnet18_graph,
+                        schedule, uniform_policy)
 from repro.core.checkpointing import apply_policy
+from repro.core.engine import sign_count
 from repro.core.fusion_search import fusion_partition
 from repro.core.verify import RULES, verify_parallel, verify_result
 
@@ -69,6 +72,32 @@ def _verify_parallel(label: str, tg, strategy) -> list:
     return findings
 
 
+def _verify_degrade(label: str, tg, strategy, failed: int = 1) -> list:
+    """Survivor-set remap: C009 coherence + warm-path (zero fresh signings)
+    assertion on re-scheduling the degraded stage graphs."""
+    cluster = edge_cluster(strategy.chips)
+    engine = get_engine(cluster.chip)
+    d = degrade(tg, cluster, strategy, failed, engine=engine)
+    findings = list(d.findings)
+    # the degrade rewrite must stay on the engine's warm path: its stage
+    # graphs are fully signed, so re-scheduling them is pure cache traffic
+    before = sign_count()
+    for sg in d.plan.stage_graphs:
+        part, quotient = fusion_partition(sg, cluster.chip, "manual", None,
+                                          engine)
+        schedule(sg, cluster.chip, part, engine=engine, quotient=quotient)
+    fresh = sign_count() - before
+    if fresh:
+        findings.append(Finding(
+            "C009", "error", d.strategy.label,
+            f"degraded reschedule left the warm path: {fresh} fresh "
+            f"signings (expected 0)"))
+    print(f"  {label} degrade {strategy.label} -{failed} chip -> "
+          f"{d.strategy.label}: {len(findings)} finding(s), "
+          f"{fresh} fresh signings")
+    return findings
+
+
 def main(argv: list | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.verify",
                                  description=__doc__.splitlines()[0])
@@ -102,6 +131,8 @@ def main(argv: list | None = None) -> int:
         findings += _verify_policies(name, tg, hda, engine)
         findings += _verify_parallel(name, tg,
                                      ParallelStrategy(2, 2, 2, microbatches=4))
+        findings += _verify_degrade(name, tg,
+                                    ParallelStrategy(2, 2, 2, microbatches=4))
 
     if findings:
         print(f"\n{len(findings)} finding(s):")

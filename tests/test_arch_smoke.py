@@ -57,8 +57,7 @@ def test_decode_step_and_cache(arch_setup):
     arch, cfg, params = arch_setup
     B, T = 2, 16
     cache = init_cache(cfg, B, T)
-    serve = jax.jit(make_serve_step(cfg),
-                    static_argnames=()) if False else make_serve_step(cfg)
+    serve = make_serve_step(cfg)
     if cfg.input_mode == "tokens":
         inp = jnp.zeros((B, 1), jnp.int32)
     else:
@@ -109,3 +108,20 @@ def test_full_config_param_counts():
 def test_moe_active_params():
     cfg = get_config("olmoe-1b-7b")
     assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+def test_serve_lm_example_smoke(monkeypatch, capsys):
+    """examples/serve_lm.py runs end-to-end on a tiny smoke config."""
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "serve_lm.py")
+    spec = importlib.util.spec_from_file_location("serve_lm_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    monkeypatch.setattr("sys.argv", ["serve_lm.py", "--arch", "gemma3-1b",
+                                     "--batch", "1", "--prompt-len", "2",
+                                     "--tokens", "3"])
+    mod.main()
+    out = capsys.readouterr().out
+    assert "decode :" in out and "generated token ids" in out

@@ -1,0 +1,159 @@
+"""Crash-resumable, budget-bounded NSGA-II (ISSUE 7).
+
+Covers: snapshot save/load round-trip, bit-for-bit resume equality for
+both genome representations, wall-clock/eval budget bounds, and
+seed-determinism of the public GA entry points."""
+
+import numpy as np
+import pytest
+
+from repro.core import (build_training_graph, edge_cluster, edge_tpu,
+                        ga_parallel, ga_policy, load_snapshot, mlp_graph,
+                        nsga2, nsga2_int, save_snapshot)
+from repro.core.nsga2 import SNAPSHOT_FORMAT
+
+
+def _eval_bool(mask):
+    x = mask.astype(float)
+    return (float(x.sum()), float((x[::2].sum() - x[1::2].sum()) ** 2),)
+
+
+def _eval_int(genome):
+    g = genome.astype(float)
+    return (float(((g - 3.0) ** 2).sum()), float(np.abs(g).sum()))
+
+
+BOUNDS = [(0, 7)] * 5
+
+
+# ---------------------------------------------------------------------------
+# snapshot format
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_round_trip(tmp_path):
+    path = str(tmp_path / "snap.json")
+    state = {"format": SNAPSHOT_FORMAT, "generation": 3, "dtype": "int",
+             "X": [[1, 2]], "F": [[0.5, 1.5]], "history": [1.0],
+             "rng_state": np.random.default_rng(0).bit_generator.state}
+    save_snapshot(path, state)
+    assert load_snapshot(path) == state
+    assert not (tmp_path / "snap.json.tmp").exists()   # atomic rename
+
+
+def test_load_snapshot_rejects_unknown_format(tmp_path):
+    path = str(tmp_path / "bad.json")
+    save_snapshot(path, {"format": "something-else"})
+    with pytest.raises(ValueError):
+        load_snapshot(path)
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("runner,evaluate,extra", [
+    (nsga2, _eval_bool, dict(n_var=8)),
+    (nsga2_int, _eval_int, dict(bounds=BOUNDS)),
+], ids=["bool", "int"])
+def test_resume_reproduces_uninterrupted_run(tmp_path, runner, evaluate,
+                                             extra):
+    """Acceptance: kill the search mid-run, resume from the last snapshot,
+    and get the uninterrupted run's result bit-for-bit."""
+    kw = dict(pop_size=12, generations=9, seed=11, **extra)
+    full = runner(evaluate, **kw)
+
+    path = str(tmp_path / "snap.json")
+    # "crash" after 6 of 9 generations, with a snapshot every 3
+    runner(evaluate, snapshot_every=3, snapshot_path=path,
+           **{**kw, "generations": 6})
+    state = load_snapshot(path)
+    assert state["generation"] == 6
+
+    resumed = runner(evaluate, resume=path, **kw)
+    np.testing.assert_array_equal(resumed.X, full.X)
+    np.testing.assert_array_equal(resumed.F, full.F)
+    np.testing.assert_array_equal(resumed.pareto_F, full.pareto_F)
+    assert resumed.history == full.history
+    assert resumed.generations_run == full.generations_run == 9
+    # the resumed process only paid for the post-crash generations
+    assert resumed.n_evals == 3 * 12
+    assert full.n_evals == (9 + 1) * 12
+
+
+def test_snapshot_knobs_do_not_perturb_search(tmp_path):
+    """Enabling snapshots (and budget checks) must not consume RNG draws —
+    the trajectory with them on equals the plain run."""
+    plain = nsga2_int(_eval_int, BOUNDS, pop_size=8, generations=5, seed=3)
+    snapped = nsga2_int(_eval_int, BOUNDS, pop_size=8, generations=5, seed=3,
+                        snapshot_every=1,
+                        snapshot_path=str(tmp_path / "s.json"),
+                        max_seconds=1e9, max_evals=10**9)
+    np.testing.assert_array_equal(plain.X, snapped.X)
+    np.testing.assert_array_equal(plain.pareto_F, snapped.pareto_F)
+
+
+# ---------------------------------------------------------------------------
+# budget bounds
+# ---------------------------------------------------------------------------
+
+
+def test_max_evals_bounds_the_search():
+    res = nsga2_int(_eval_int, BOUNDS, pop_size=10, generations=50, seed=0,
+                    max_evals=35)
+    assert res.n_evals <= 35
+    assert res.n_evals == 30          # init 10 + two generations of 10
+    assert res.generations_run == 2
+    assert len(res.pareto_F) >= 1     # best-so-far front, not an error
+
+
+def test_max_seconds_zero_returns_initial_front():
+    res = nsga2(_eval_bool, n_var=6, pop_size=8, generations=40, seed=0,
+                max_seconds=0.0)
+    assert res.generations_run == 0
+    assert res.n_evals == 8
+    assert len(res.pareto_F) >= 1
+
+
+# ---------------------------------------------------------------------------
+# public GA entry points: determinism + passthrough
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_tg():
+    return build_training_graph(mlp_graph(4, widths=(16, 16)), "adam")
+
+
+def test_ga_parallel_seed_determinism(tiny_tg):
+    kw = dict(chip_counts=[1, 2], pop_size=6, generations=2, seed=5)
+    r1, _ = ga_parallel(tiny_tg, edge_cluster, **kw)
+    r2, _ = ga_parallel(tiny_tg, edge_cluster, **kw)
+    np.testing.assert_array_equal(r1.pareto_X, r2.pareto_X)
+    np.testing.assert_array_equal(r1.pareto_F, r2.pareto_F)
+
+    r3, _ = ga_parallel(tiny_tg, edge_cluster, **{**kw, "seed": 6})
+    assert (r3.X.shape != r1.X.shape) or not np.array_equal(r3.X, r1.X)
+
+
+def test_ga_policy_seed_determinism(tiny_tg):
+    hda = edge_tpu()
+    kw = dict(pop_size=6, generations=2, seed=5)
+    r1 = ga_policy(tiny_tg, hda, **kw)
+    r2 = ga_policy(tiny_tg, hda, **kw)
+    np.testing.assert_array_equal(r1.ga.pareto_F, r2.ga.pareto_F)
+    assert [s.peak_mem for s in r1.pareto] == [s.peak_mem for s in r2.pareto]
+
+
+def test_ga_parallel_resume_passthrough(tiny_tg, tmp_path):
+    """The resume plumbing works end-to-end through the public GA: resumed
+    fronts equal the uninterrupted run's."""
+    path = str(tmp_path / "ga.json")
+    kw = dict(chip_counts=[1, 2], pop_size=6, generations=4, seed=1)
+    full, _ = ga_parallel(tiny_tg, edge_cluster, **kw)
+    ga_parallel(tiny_tg, edge_cluster, snapshot_every=2, snapshot_path=path,
+                **{**kw, "generations": 2})
+    resumed, _ = ga_parallel(tiny_tg, edge_cluster, resume=path, **kw)
+    np.testing.assert_array_equal(resumed.pareto_F, full.pareto_F)
+    np.testing.assert_array_equal(resumed.X, full.X)

@@ -56,8 +56,15 @@ EXPECTED = {
     "keepset_to_policy", "policy_from_keep", "resolve_remat",
     # model-invariant verifier + sanitizer (repro.core.verify)
     "RULES", "Finding", "VerificationError", "sanitize_enabled",
-    "verify_cache", "verify_graph", "verify_parallel", "verify_result",
-    "verify_schedule",
+    "verify_cache", "verify_degrade", "verify_graph", "verify_parallel",
+    "verify_result", "verify_schedule",
+    # fault-aware resilience + fault injection + crash-resumable search
+    "FaultModel", "edge_fault_model", "datacenter_fault_model",
+    "CheckpointPlan", "DegradeResult", "GoodputResult", "degrade",
+    "evaluate_goodput", "optimal_checkpoint_interval", "resolve_fault",
+    "nearest_strategy", "ResiliencePoint", "sweep_resilience",
+    "FAULTS", "FaultSpec", "InjectionReport", "inject", "run_campaign",
+    "load_snapshot", "save_snapshot",
 }
 
 
@@ -69,6 +76,7 @@ def test_verify_rule_registry_pinned():
         "M020", "M021", "M022", "M023", "M024", "M030", "M031", "M032",
         "S001", "S002", "S003", "S004", "S005", "S006", "S007",
         "C001", "C002", "C003", "C004", "C005", "C006", "C007", "C008",
+        "C009",
     }
     assert seed_rules <= set(core.RULES)
 

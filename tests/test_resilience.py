@@ -1,0 +1,215 @@
+"""Fault-aware resilience subsystem (ISSUE 7).
+
+Covers: the Young–Daly/Daly checkpoint-interval selection, goodput
+composition (breakdown conservation, monotonicity in the failure rate),
+fault-model attachment on the cluster factories, degraded-mode
+rescheduling (C009 coherence + the zero-fresh-signings warm-path
+contract), and the resilience DSE sweep."""
+
+import math
+
+import pytest
+
+from repro.core import (FaultModel, ParallelStrategy, build_training_graph,
+                        datacenter_cluster, datacenter_fault_model, degrade,
+                        edge_cluster, edge_fault_model, evaluate_goodput,
+                        evaluate_parallel, get_engine, mlp_graph,
+                        nearest_strategy, optimal_checkpoint_interval,
+                        resolve_fault, schedule, strategy_space,
+                        sweep_resilience)
+from repro.core.engine import sign_count
+from repro.core.fusion_search import fusion_partition
+
+
+@pytest.fixture(scope="module")
+def mlp_tg():
+    return build_training_graph(mlp_graph(8), "adam")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-interval selection
+# ---------------------------------------------------------------------------
+
+
+def test_interval_matches_young_daly_analytic():
+    """Acceptance: the discrete optimum is within 5% of the closed form in
+    the regime where Young–Daly is accurate (δ, R ≪ M)."""
+    plan = optimal_checkpoint_interval(
+        t_step_s=1.0, write_s=5.0, recovery_s=30.0, mtbf_s=20_000.0)
+    tau_yd = math.sqrt(2 * 5.0 * 20_000.0)
+    assert plan.tau_yd_s == pytest.approx(tau_yd)
+    assert abs(plan.interval_s - tau_yd) / tau_yd < 0.05
+    assert 0.0 < plan.efficiency < 1.0
+    assert plan.interval_steps * 1.0 == plan.interval_s
+
+
+def test_interval_discrete_search_beats_neighbors():
+    """The selected integer step count is a local optimum of the exact Daly
+    efficiency — neither neighbor does better."""
+    from repro.core.resilience import _segment_efficiency
+
+    plan = optimal_checkpoint_interval(
+        t_step_s=2.0, write_s=3.0, recovery_s=10.0, mtbf_s=5_000.0)
+    k = plan.interval_steps
+
+    def eff(steps):
+        return float(_segment_efficiency(
+            steps * 2.0, 3.0, 10.0, 5_000.0))
+
+    assert eff(k) >= eff(k + 1)
+    if k > 1:
+        assert eff(k) >= eff(k - 1)
+
+
+def test_interval_wide_range_geomspace_close_to_exact():
+    """Edge-class MTBF vs microsecond steps forces the sampled search; it
+    must stay within a fraction of a percent of exhaustive enumeration."""
+    plan = optimal_checkpoint_interval(
+        t_step_s=1e-4, write_s=0.5, recovery_s=5.0, mtbf_s=1e7)
+    exact = optimal_checkpoint_interval(
+        t_step_s=1e-4, write_s=0.5, recovery_s=5.0, mtbf_s=1e7,
+        max_steps=plan.interval_steps * 2)
+    assert abs(plan.efficiency - exact.efficiency) < 1e-6
+
+
+def test_interval_rejects_degenerate_inputs():
+    with pytest.raises(ValueError):
+        optimal_checkpoint_interval(0.0, 1.0, 1.0, 100.0)
+    with pytest.raises(ValueError):
+        optimal_checkpoint_interval(1.0, 1.0, 1.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fault models on clusters
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_factories_attach_fault_models():
+    e, d = edge_cluster(2), datacenter_cluster(2)
+    assert e.fault == edge_fault_model()
+    assert d.fault == datacenter_fault_model()
+    assert d.fault.mtbf_s == d.fault.mtbf_hours * 3600.0
+    assert d.fault.cluster_mtbf_s(4) == pytest.approx(d.fault.mtbf_s / 4)
+
+    custom = FaultModel(mtbf_hours=1.0)
+    assert edge_cluster(2, fault=custom).fault is custom
+    # precedence: explicit arg > cluster attachment > ideal default
+    assert resolve_fault(e, custom) is custom
+    assert resolve_fault(e) is e.fault
+
+
+# ---------------------------------------------------------------------------
+# goodput
+# ---------------------------------------------------------------------------
+
+
+def test_goodput_below_raw_and_breakdown_conserves(mlp_tg):
+    cluster = datacenter_cluster(4)
+    res = evaluate_goodput(mlp_tg, cluster,
+                           ParallelStrategy(data=2, pipeline=2,
+                                            microbatches=4))
+    assert 0.0 < res.goodput < res.raw_throughput
+    assert 0.0 < res.efficiency < 1.0
+    assert res.goodput == pytest.approx(res.raw_throughput * res.efficiency)
+    assert sum(res.breakdown.values()) == pytest.approx(1.0)
+    assert all(v >= 0.0 for v in res.breakdown.values())
+    assert res.ckpt_bytes > 0.0
+    row = res.as_row()
+    assert row["frac_useful"] == pytest.approx(res.breakdown["useful"])
+    assert row["ckpt_interval_steps"] == res.ckpt.interval_steps
+
+
+def test_goodput_reuses_precomputed_result(mlp_tg):
+    cluster = datacenter_cluster(2)
+    strat = ParallelStrategy(data=2)
+    engine = get_engine(cluster.chip)
+    pres = evaluate_parallel(mlp_tg, cluster, strat, engine=engine)
+    a = evaluate_goodput(mlp_tg, cluster, strat, engine=engine, result=pres)
+    b = evaluate_goodput(mlp_tg, cluster, strat, engine=engine)
+    assert a.goodput == b.goodput
+    assert a.ckpt.interval_steps == b.ckpt.interval_steps
+    assert a.result is pres
+
+
+def test_goodput_efficiency_decreases_with_failure_rate(mlp_tg):
+    cluster = datacenter_cluster(2)
+    strat = ParallelStrategy(data=2)
+    effs = [evaluate_goodput(mlp_tg, cluster, strat,
+                             fault=FaultModel(mtbf_hours=m)).efficiency
+            for m in (50_000.0, 500.0, 5.0)]
+    assert effs[0] > effs[1] > effs[2]
+
+
+def test_goodput_ideal_fault_model_is_nearly_lossless(mlp_tg):
+    cluster = datacenter_cluster(2)
+    res = evaluate_goodput(
+        mlp_tg, cluster, ParallelStrategy(data=2),
+        fault=FaultModel(mtbf_hours=1e12, transient_per_hour=0.0,
+                         dma_stall_frac=0.0, restart_s=0.0))
+    assert res.efficiency > 1.0 - 1e-6
+    assert res.breakdown["useful"] == pytest.approx(1.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode rescheduling
+# ---------------------------------------------------------------------------
+
+
+def test_nearest_strategy_prefers_minimal_change():
+    s = ParallelStrategy(data=2, tensor=2, pipeline=2, microbatches=4)
+    d = nearest_strategy(s, 6)       # lose 2 of 8: keep tp2, shrink elsewhere
+    assert d.chips == 6
+    assert d.tensor == 2
+    d7 = nearest_strategy(s, 7)      # prime survivor count
+    assert d7.chips == 7
+    z = ParallelStrategy(data=4, zero=True)
+    dz = nearest_strategy(z, 2)
+    assert dz.zero and dz.data == 2
+    assert nearest_strategy(s, 8) == s
+
+
+def test_degrade_is_coherent_and_stays_warm(mlp_tg):
+    """Acceptance: a degraded plan passes verification with zero findings
+    AND re-scheduling its stage graphs costs zero fresh signings — the
+    remap rides the engine's warm path."""
+    cluster = datacenter_cluster(4)
+    strat = ParallelStrategy(data=2, pipeline=2, microbatches=4)
+    engine = get_engine(cluster.chip)
+    evaluate_parallel(mlp_tg, cluster, strat, engine=engine)
+
+    d = degrade(mlp_tg, cluster, strat, 1, engine=engine)
+    assert d.cluster.n_chips == 3
+    assert d.strategy.chips == 3
+    assert d.findings == []
+    assert d.result.feasible in (True, False)
+
+    before = sign_count()
+    for sg in d.plan.stage_graphs:
+        part, _ = fusion_partition(sg, d.cluster.chip, "manual", None, engine)
+        schedule(sg, d.cluster.chip, part, engine=engine)
+    assert sign_count() == before
+
+
+def test_degrade_rejects_impossible_losses(mlp_tg):
+    cluster = edge_cluster(2)
+    with pytest.raises(ValueError):
+        degrade(mlp_tg, cluster, ParallelStrategy(data=2), 2)
+    with pytest.raises(ValueError):
+        degrade(mlp_tg, cluster, ParallelStrategy(data=2), -1)
+
+
+# ---------------------------------------------------------------------------
+# sweep composition
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_resilience_rows(mlp_tg):
+    pts = sweep_resilience({"mlp": mlp_tg}, edge_cluster, [1, 2])
+    assert {p.n_chips for p in pts} == {1, 2}
+    assert len(pts) == len(strategy_space(1)) + len(strategy_space(2))
+    for p in pts:
+        r = p.results["mlp"]
+        assert 0.0 < r.efficiency <= 1.0
+        row = p.row()
+        assert row["chips"] == p.n_chips
+        assert row["mlp_goodput"] == pytest.approx(r.goodput)
