@@ -3,6 +3,8 @@
 
 from __future__ import annotations
 
+import time
+
 from repro.core import (build_training_graph, gpt2_graph, resnet18_graph,
                         trace_fn)
 
@@ -10,6 +12,7 @@ from .common import dump, emit, timed
 
 
 def run_table1():
+    t0 = time.perf_counter()
     rows = [
         dict(framework="Timeloop+Accelergy", training="No",
              granularity="Operator", target="DA"),
@@ -25,7 +28,9 @@ def run_table1():
              granularity="Fine-grained fusion", target="HDA + TPU pods"),
     ]
     dump("table1_capabilities", rows)
-    emit("table1_capabilities", 0.0,
+    # artifact-generation time: tiny but real, so the record never carries
+    # a 0.0 the regression guard would have to special-case
+    emit("table1_capabilities", (time.perf_counter() - t0) * 1e6,
          "training=fwd+bwd+opt;granularity=fine_fusion;target=HDA")
     return rows
 

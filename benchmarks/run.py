@@ -63,6 +63,8 @@ def main() -> None:
         bench_checkpointing.run_fig11()
     if want("engine"):
         bench_engine.run()
+    if want("engine_batch"):
+        bench_engine.run_batch()
     if want("memory"):
         bench_memory.run()
     if want("parallel"):

@@ -36,6 +36,8 @@ import sys
 HOT_PATHS = {
     "engine_cold": "engine",
     "engine_delta": "engine",
+    "engine_batch_warm": "engine_batch",
+    "ga_policy_batched": "engine_batch",
     "memory_lifetime_plan": "memory",
     "memory_policy_eval": "memory",
     "fig1_fig8_resnet_edgetpu_dse": "fig1_fig8",

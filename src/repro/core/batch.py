@@ -1,0 +1,749 @@
+"""Batched population evaluation over the engine's SoA signature tables.
+
+The NSGA-II population loops (``checkpointing.ga_checkpointing`` /
+``ga_policy``) spend their time rebuilding near-identical rewritten graphs:
+every keep-mask pays a full ``WorkloadGraph.copy()`` + ``validate()`` +
+re-partition + plan build before the engine's content-keyed caches can even
+be consulted.  :class:`PopulationEvaluator` removes that per-genome graph
+materialization entirely: the base training graph is lowered **once** into
+flat integer arrays (tensor bytes, producer ids, unique-predecessor edges,
+per-read consumer edges, node signature ids, structural depths), and each
+phenotype — the rewritten graph a keep/recompute assignment induces — is
+then *simulated* on those arrays:
+
+* the recompute-closure clone construction mirrors
+  ``checkpointing.apply_checkpointing`` (same ``sorted(discard)`` order,
+  same shared-clone recursion), but allocates ints instead of graph nodes;
+* everything downstream is patched incrementally: only the *touched halo*
+  (rewired backward consumers, recompute clones, producers of tensors whose
+  consumer sets changed) gets fresh adjacency — the rest of the graph
+  reuses the base arrays through copy-on-write masks;
+* the canonical topo order falls out for free: the canonical order is
+  sort-by-(structural depth, registration serial) (see
+  ``WorkloadGraph.topo_order``), a recompute clone has exactly its source
+  node's depth and rewiring a backward consumer to the clone preserves its
+  depth, so the phenotype order is one stable argsort over precomputed
+  depths;
+* the manual-fusion walk, quotient acyclicity check, subgraph costing
+  (through the engine's shared ``_sg`` / node-cost caches, so signatures
+  are **never** re-signed — identical phenotypes across the batch are
+  deduped by their recompute set and cost nothing), the lifetime arrays and
+  the list schedule replicate the scalar pipeline operation-for-operation,
+  so the objectives are **bit-for-bit** those of the scalar oracle
+  (enforced by ``tests/test_engine_batch.py`` and the Hypothesis property
+  suite).
+
+The scalar oracle still runs whenever exactness cannot be replayed on the
+array view: OFFLOAD genes (DMA splicing), non-``manual`` fusion modes, a
+cyclic manual quotient (``repair_partition`` would split it), and always
+under ``REPRO_SANITIZE`` so the sanitizer's shadow-verification contract is
+preserved.  See docs/engine.md (batched evaluation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .cost_model import subgraph_tail
+from .engine import get_engine, graph_sigs
+from .memory import ACTIVATIONS, MEM_CATEGORIES, ActivationPolicy, \
+    LifetimePlan, lifetime_profile
+from .training_transform import BWD_KINDS, TrainingGraph
+
+_ACT_CODE = MEM_CATEGORIES.index(ACTIVATIONS)
+_EMPTY_I64 = np.asarray([], dtype=np.int64)
+
+
+class _ScalarFallback(Exception):
+    """Raised when a phenotype needs the scalar oracle (cyclic quotient)."""
+
+
+class _MiniPlan:
+    """Duck-typed stand-in for ``scheduling._Plan`` (list-schedule inputs)."""
+
+    __slots__ = ("n", "succ", "prio", "indeg")
+
+    def __init__(self, n, succ, prio, indeg):
+        self.n = n
+        self.succ = succ
+        self.prio = prio
+        self.indeg = indeg
+
+
+class PopulationEvaluator:
+    """Batched scorer for keep/recompute phenotypes of one training graph.
+
+    ``score_keep`` / ``score_keep_batch`` evaluate boolean keep-masks
+    (``ga_checkpointing`` objectives: latency, energy, stored activation
+    bytes); ``score_policy`` / ``score_policy_batch`` evaluate ternary
+    :class:`~repro.core.memory.ActivationPolicy` genomes (``ga_policy``
+    objectives: latency, energy, peak memory).  Results are bit-for-bit
+    identical to the scalar pipeline.  Identical phenotypes are deduped on
+    their recompute set, so a population full of duplicate genomes is
+    scored once (``stats`` counts soa/scalar/dedup-hit evaluations)."""
+
+    def __init__(self, tg: TrainingGraph, hda, engine=None,
+                 fusion: str = "manual"):
+        self.tg = tg
+        self.hda = hda
+        self.engine = engine if engine is not None else get_engine(hda)
+        self.fusion = fusion
+        self.acts = list(tg.activations)
+        self.act_bytes = [tg.graph.tensors[a].bytes for a in self.acts]
+        g = tg.graph
+        # ``.rc`` names are reserved by the rewrite; a base graph already
+        # using them would collide with the clone namespace — oracle only
+        self.supported = (fusion == "manual"
+                          and not any(t.endswith(".rc") for t in g.tensors)
+                          and not any(n.endswith(".rc") for n in g.nodes))
+        self._cache: dict[frozenset, tuple] = {}   # rec-set -> (lat, en, peak)
+        self._pol_cache: dict[bytes, tuple] = {}   # OFFLOAD genomes (scalar)
+        self.stats = dict(soa=0, scalar=0, hits=0)
+        self._ready = False
+
+    # -- population surfaces ------------------------------------------------
+
+    def score_keep(self, mask) -> tuple:
+        """Objectives of one keep-mask: (latency, energy, stored bytes)."""
+        rec = frozenset(i for i in range(len(self.acts)) if not mask[i])
+        lat, en, _peak = self._eval_rec(rec)
+        stored = 0
+        for i, b in enumerate(self.act_bytes):
+            if i not in rec:
+                stored += b
+        return (lat, en, float(stored))
+
+    def score_keep_batch(self, masks) -> list:
+        return [self.score_keep(m) for m in masks]
+
+    def score_policy(self, genome) -> tuple:
+        """Objectives of one ternary genome: (latency, energy, peak mem)."""
+        off = [i for i, p in enumerate(genome)
+               if int(p) == int(ActivationPolicy.OFFLOAD)]
+        if off:                      # DMA splicing: scalar oracle territory
+            from .verify import sanitize_enabled
+            if sanitize_enabled():   # same no-memo contract as _eval_rec
+                return self._scalar_policy(genome)
+            key = np.asarray(genome, dtype=np.int8).tobytes()
+            hit = self._pol_cache.get(key)
+            if hit is None:
+                hit = self._pol_cache[key] = self._scalar_policy(genome)
+            else:
+                self.stats["hits"] += 1
+            return hit
+        rec = frozenset(i for i, p in enumerate(genome)
+                        if int(p) == int(ActivationPolicy.RECOMPUTE))
+        lat, en, peak = self._eval_rec(rec)
+        return (lat, en, float(peak))
+
+    def score_policy_batch(self, genomes) -> list:
+        return [self.score_policy(g) for g in genomes]
+
+    # -- phenotype dedup + dispatch -----------------------------------------
+
+    def _eval_rec(self, rec: frozenset) -> tuple:
+        from .verify import sanitize_enabled
+        if sanitize_enabled():
+            # never serve (or populate) memoized phenotypes under the
+            # sanitizer: every evaluation must flow through the scalar
+            # pipeline so shadow verification sees the real rewrite
+            return self._scalar_rec(rec)
+        hit = self._cache.get(rec)
+        if hit is not None:
+            self.stats["hits"] += 1
+            return hit
+        if not self.supported or not rec:
+            # the empty rewrite goes through the oracle on purpose: it seeds
+            # the engine's schedule memo with the baseline fingerprint
+            out = self._scalar_rec(rec)
+        else:
+            if not self._ready:
+                self._prepare()
+            try:
+                out = self._soa_rec(rec)
+                self.stats["soa"] += 1
+            except (_ScalarFallback, RecursionError):
+                out = self._scalar_rec(rec)
+        self._cache[rec] = out
+        return out
+
+    # -- scalar oracle -------------------------------------------------------
+
+    def _scalar_rec(self, rec: frozenset) -> tuple:
+        from .checkpointing import _fusion_partition, apply_checkpointing
+        from .scheduling import schedule
+        self.stats["scalar"] += 1
+        if rec:
+            keep = {a for i, a in enumerate(self.acts) if i not in rec}
+            g2 = apply_checkpointing(self.tg, keep)
+        else:
+            # the empty rewrite is the identity: schedule the base graph
+            # directly (content-identical fingerprint, bit-for-bit result)
+            g2 = self.tg.graph
+        part, quotient = _fusion_partition(g2, self.hda, self.fusion, None,
+                                           self.engine)
+        res = schedule(g2, self.hda, part, engine=self.engine,
+                       quotient=quotient)
+        return (res.latency, res.energy, res.peak_mem)
+
+    def _scalar_policy(self, genome) -> tuple:
+        from .checkpointing import evaluate_policy
+        self.stats["scalar"] += 1
+        pol = {self.acts[i]: ActivationPolicy(int(genome[i]))
+               for i in range(len(self.acts))}
+        s = evaluate_policy(self.tg, self.hda, pol, self.fusion,
+                            engine=self.engine)
+        return (s.latency, s.energy, float(s.peak_mem))
+
+    # -- base-graph lowering (once) -----------------------------------------
+
+    def _prepare(self) -> None:
+        g = self.tg.graph
+        eng = self.engine
+        graph_sigs(g)
+        g.topo_order()
+        self.bound = eng.bind(g)
+        sigs = self.bound.sigs
+        names = list(g.nodes)
+        self.names = names
+        N = len(names)
+        self.N = N
+        nid = {n: i for i, n in enumerate(names)}
+        tnames = list(g.tensors)
+        T = len(tnames)
+        self.T = T
+        tid = {t: i for i, t in enumerate(tnames)}
+        tensors = g.tensors
+        tb = sigs.tb
+        self.tbytes = [tb[t] if t in tb else tensors[t].bytes
+                       for t in tnames]
+        self.tby_np = np.asarray(self.tbytes, dtype=np.int64)
+        prod = [-1] * T
+        for t, p in g.producer.items():
+            prod[tid[t]] = nid[p]
+        self.prod = prod
+        node_objs = [g.nodes[n] for n in names]
+        self.node_objs = node_objs
+        self.ins_l = [[tid[t] for t in nd.inputs] for nd in node_objs]
+        self.outs_l = [[tid[t] for t in nd.outputs] for nd in node_objs]
+        cls_l = [nd.op_class for nd in node_objs]
+        self.is_cg = [c in ("conv", "gemm") for c in cls_l]
+        self.is_simd = [c == "simd" for c in cls_l]
+        bwd = [nd.kind in BWD_KINDS for nd in node_objs]
+        cons: list = [[] for _ in range(T)]     # per-read consumer lists
+        for v, ins in enumerate(self.ins_l):
+            for t in ins:
+                cons[t].append(v)
+        cons_u: list = []                       # unique, order-free use
+        for cs in cons:
+            seen: set = set()
+            u: list = []
+            for c in cs:
+                if c not in seen:
+                    seen.add(c)
+                    u.append(c)
+            cons_u.append(u)
+        self.base_cons_u = cons_u
+        self.static_f = [tensors[t].is_param or tensors[t].is_state
+                         or tensors[t].is_input for t in tnames]
+        # unique pred/succ adjacency + canonical structural depths
+        preds_u: list = []
+        succs_u: list = [[] for _ in range(N)]
+        for v, ins in enumerate(self.ins_l):
+            seen = set()
+            ps: list = []
+            for t in ins:
+                p = prod[t]
+                if p >= 0 and p not in seen:
+                    seen.add(p)
+                    ps.append(p)
+            preds_u.append(ps)
+            for p in ps:
+                succs_u[p].append(v)
+        self.base_preds = preds_u
+        self.base_succs = succs_u
+        depth = [0] * N
+        indeg = [len(ps) for ps in preds_u]
+        stack = [v for v in range(N) if indeg[v] == 0]
+        n_out = 0
+        while stack:
+            v = stack.pop()
+            n_out += 1
+            d = depth[v] + 1
+            for s in succs_u[v]:
+                if depth[s] < d:
+                    depth[s] = d
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    stack.append(s)
+        assert n_out == N, "base graph must be acyclic"
+        self.depth_np = np.asarray(depth, dtype=np.int64)
+        # flat edge arrays: unique-pred edges and per-read consumer edges
+        self.bEp = np.asarray([p for ps in preds_u for p in ps],
+                              dtype=np.int64)
+        self.bEv = np.asarray([v for v, ps in enumerate(preds_u)
+                               for _ in ps], dtype=np.int64)
+        self.brT = np.asarray([t for ins in self.ins_l for t in ins],
+                              dtype=np.int64)
+        self.brN = np.asarray([v for v, ins in enumerate(self.ins_l)
+                               for _ in ins], dtype=np.int64)
+        prod_np = np.asarray(prod, dtype=np.int64)
+        self.pflag = prod_np >= 0
+        self.produced0 = np.nonzero(self.pflag)[0]
+        self.prod_nodes0 = prod_np[self.produced0]
+        self.nbytes0 = self.tby_np[self.produced0]
+        # activations
+        self.act_tid = [tid[a] for a in self.acts]
+        self.act_sorted = sorted(range(len(self.acts)),
+                                 key=self.acts.__getitem__)
+        act_bwd = []
+        for a in self.acts:
+            seen = set()
+            cs = []
+            for c in cons[tid[a]]:
+                if bwd[c] and c not in seen:
+                    seen.add(c)
+                    cs.append(c)
+            act_bwd.append(cs)
+        self.act_bwd = act_bwd
+        # engine-side per-node lookups
+        self.sid = [sigs.sid[n] for n in names]
+        self.core_name = [eng.core_for_class(c).name for c in cls_l]
+        self.resource = [eng.resource_for_class(c) for c in cls_l]
+        self.ckey = [eng.ckey_for_class(c) for c in cls_l]
+        self.leak = self.hda.leak_per_cycle()
+        self.static = sigs.static
+        self.static_by_cat = dict(sigs.static_by_cat)
+        cat = sigs.cat
+        cat_np = np.asarray([cat.get(t, _ACT_CODE) for t in tnames],
+                            dtype=np.int64)
+        self.cats0 = cat_np[self.produced0]
+        self._cost1: list = [None] * N       # per-node singleton cost
+        self._grp_cache: dict = {}           # untouched fused group -> cost
+        self._ready = True
+
+    # -- one phenotype on the array view ------------------------------------
+
+    def _soa_rec(self, rec: frozenset) -> tuple:
+        N = self.N
+        T = self.T
+        prod = self.prod
+        ins_l = self.ins_l
+        outs_l = self.outs_l
+        static_f = self.static_f
+        act_tid = self.act_tid
+        kept_t = {act_tid[i] for i in range(len(self.acts)) if i not in rec}
+
+        # ---- recompute-closure clone construction (apply_checkpointing) ---
+        clone_of: dict = {}
+        new_t_src: list = []           # clone tensor (tid T+j) -> source tid
+        new_t_prod: list = []          # clone tensor -> producing clone node
+        clone_src: list = []           # clone node (nid N+c) -> source nid
+        clone_ins: list = []
+        clone_outs: list = []
+
+        def rc(t: int) -> int:
+            if static_f[t] or t in kept_t:
+                return t
+            c = clone_of.get(t)
+            if c is not None:
+                return c
+            p = prod[t]
+            if p < 0:
+                clone_of[t] = t
+                return t
+            nin = [rc(x) for x in ins_l[p]]
+            cn = N + len(clone_src)
+            outs: list = []
+            for o in outs_l[p]:
+                co = T + len(new_t_src)
+                clone_of[o] = co
+                new_t_src.append(o)
+                new_t_prod.append(cn)
+                outs.append(co)
+            clone_src.append(p)
+            clone_ins.append(nin)
+            clone_outs.append(outs)
+            return clone_of[t]
+
+        patched_ins: dict = {}
+        changed_acts: list = []
+        for i in self.act_sorted:       # == sorted(discard) by name
+            if i not in rec:
+                continue
+            consb = self.act_bwd[i]
+            if not consb:
+                continue
+            a = act_tid[i]
+            r = rc(a)
+            if r == a:
+                continue
+            changed_acts.append(a)
+            for b in consb:
+                cur = patched_ins.get(b)
+                if cur is None:
+                    cur = ins_l[b]
+                patched_ins[b] = [r if t == a else t for t in cur]
+
+        NC = len(clone_src)
+        if not NC and not patched_ins:
+            # the rewrite was the identity (no discarded act had a backward
+            # consumer): content-equal to the baseline phenotype
+            return self._eval_rec(frozenset())
+        NT = N + NC
+
+        def prodof(t: int) -> int:
+            return prod[t] if t < T else new_t_prod[t - T]
+
+        # ---- incremental adjacency: patch rows for the touched halo -------
+        patchT: list = []              # phenotype read-edge patches
+        patchN: list = []
+        added: dict = {}               # tensor -> set of new reader nids
+        pred_over: dict = {}           # node -> unique pred list (override)
+        pe: list = []                  # unique-pred edge patches
+        pv: list = []
+
+        def patch_reads(v: int, nin: list) -> None:
+            seen: set = set()
+            pl: list = []
+            for t in nin:
+                patchT.append(t)
+                patchN.append(v)
+                s = added.get(t)
+                if s is None:
+                    s = added[t] = set()
+                s.add(v)
+                p = prodof(t)
+                if p >= 0 and p not in seen:
+                    seen.add(p)
+                    pl.append(p)
+                    pe.append(p)
+                    pv.append(v)
+            pred_over[v] = pl
+
+        for b, nin in patched_ins.items():
+            patch_reads(b, nin)
+        for c in range(NC):
+            patch_reads(N + c, clone_ins[c])
+
+        rew_set = set(patched_ins)
+        # base tensors whose consumer set changed: rewired activations lose
+        # their backward readers, clone-input tensors gain clone readers
+        changed = set(changed_acts)
+        for t in added:
+            if t < T:
+                changed.add(t)
+
+        # successor overrides: producers of changed tensors + all clones
+        base_cons_u = self.base_cons_u
+
+        def cons_u_of(o: int):
+            if o >= T:
+                return added.get(o, ())
+            s = added.get(o)
+            out = [c for c in base_cons_u[o] if c not in rew_set]
+            if s:
+                out.extend(s)
+            return out
+
+        succ_over: dict = {}
+        affected: set = set()
+        for t in changed:
+            p = prod[t]
+            if p >= 0:
+                affected.add(p)
+        for p in affected:
+            su: set = set()
+            for o in outs_l[p]:
+                su.update(cons_u_of(o))
+            succ_over[p] = list(su)
+        for c in range(NC):
+            su = set()
+            for o in clone_outs[c]:
+                su.update(cons_u_of(o))
+            succ_over[N + c] = list(su)
+
+        # ---- phenotype edge arrays (copy-on-write off the base) -----------
+        flag = np.ones(N, dtype=bool)
+        if rew_set:
+            flag[list(rew_set)] = False
+        keep_e = flag[self.bEv]
+        Ep = np.concatenate([self.bEp[keep_e],
+                             np.asarray(pe, dtype=np.int64)])
+        Ev = np.concatenate([self.bEv[keep_e],
+                             np.asarray(pv, dtype=np.int64)])
+        keep_r = flag[self.brN]
+        rT = np.concatenate([self.brT[keep_r],
+                             np.asarray(patchT, dtype=np.int64)])
+        rN = np.concatenate([self.brN[keep_r],
+                             np.asarray(patchN, dtype=np.int64)])
+        o_srt = np.argsort(rT, kind="stable")
+        rTs = rT[o_srt]
+        rNs = rN[o_srt]
+        nt = len(new_t_src)
+        pf = np.concatenate([self.pflag, np.ones(nt, dtype=bool)])
+        mprod = pf[rTs]
+        crT = rTs[mprod]               # reads of produced tensors, by tid
+        crN = rNs[mprod]
+
+        # ---- canonical topo: clones inherit their source's depth ----------
+        cs_np = np.asarray(clone_src, dtype=np.int64)
+        depth_ext = np.concatenate([self.depth_np, self.depth_np[cs_np]])
+        order_l = np.argsort(depth_ext, kind="stable").tolist()
+
+        # ---- manual-fusion walk (fusion.manual_fusion) --------------------
+        is_cg = self.is_cg + [self.is_cg[s] for s in clone_src]
+        is_simd = self.is_simd + [self.is_simd[s] for s in clone_src]
+        base_succ = self.base_succs
+        base_pred = self.base_preds
+        sget = succ_over.get
+        pget = pred_over.get
+        taken = bytearray(NT)
+        part: list = []
+        prio: list = []
+        sg_l = [0] * NT
+        for i, v in enumerate(order_l):
+            if taken[v]:
+                continue
+            gi = len(part)
+            grp = [v]
+            taken[v] = 1
+            sg_l[v] = gi
+            prio.append(i)
+            if is_cg[v]:
+                cur = v
+                while True:
+                    sl = sget(cur)
+                    if sl is None:
+                        sl = base_succ[cur]
+                    nxt = -1
+                    cnt = 0
+                    for s in sl:
+                        if not taken[s]:
+                            cnt += 1
+                            if cnt > 1:
+                                break
+                            nxt = s
+                    if cnt != 1:
+                        break
+                    s = nxt
+                    if not is_simd[s]:
+                        break
+                    pl = pget(s)
+                    if pl is None:
+                        pl = base_pred[s]
+                    ok = True
+                    for p in pl:
+                        if not taken[p] and p != cur:
+                            ok = False
+                            break
+                    if not ok:
+                        break
+                    grp.append(s)
+                    taken[s] = 1
+                    sg_l[s] = gi
+                    cur = s
+                    if len(grp) >= 4:
+                        break
+            part.append(grp)
+        NG = len(part)
+        sg_np = np.asarray(sg_l, dtype=np.int64)
+
+        # ---- quotient DAG + acyclicity (repair_partition's cheap pass) ----
+        gb = sg_np[Ep]
+        ga = sg_np[Ev]
+        m = gb != ga
+        uk = np.unique(gb[m] * NG + ga[m])
+        qb = uk // NG
+        qa = uk % NG
+        indeg_l = np.bincount(qa, minlength=NG).tolist()
+        offs = np.zeros(NG + 1, dtype=np.int64)
+        np.cumsum(np.bincount(qb, minlength=NG), out=offs[1:])
+        qa_l = qa.tolist()
+        offs_l = offs.tolist()
+        succ_lists = [qa_l[offs_l[i]:offs_l[i + 1]] for i in range(NG)]
+        ind2 = indeg_l.copy()
+        stack = [i for i in range(NG) if ind2[i] == 0]
+        seen_q = 0
+        while stack:
+            x = stack.pop()
+            seen_q += 1
+            for y in succ_lists[x]:
+                ind2[y] -= 1
+                if ind2[y] == 0:
+                    stack.append(y)
+        if seen_q != NG:
+            raise _ScalarFallback      # repair_partition would split groups
+
+        # ---- lifetime arrays (memory.build_lifetime_plan) -----------------
+        if nt:
+            Pt = np.concatenate([self.produced0,
+                                 np.arange(T, T + nt, dtype=np.int64)])
+            prod_nodes = np.concatenate([
+                self.prod_nodes0, np.asarray(new_t_prod, dtype=np.int64)])
+            nbytes = np.concatenate([
+                self.nbytes0,
+                self.tby_np[np.asarray(new_t_src, dtype=np.int64)]])
+            cats = np.concatenate([
+                self.cats0, np.full(nt, _ACT_CODE, dtype=np.int64)])
+        else:
+            Pt = self.produced0
+            prod_nodes = self.prod_nodes0
+            nbytes = self.nbytes0
+            cats = self.cats0
+        prod_sg = sg_np[prod_nodes]
+        lo = np.searchsorted(crT, Pt)
+        hi = np.searchsorted(crT, Pt + 1)
+        counts = hi - lo
+        consg = sg_np[crN]
+        z = counts == 0
+        if z.any():                    # no consumers: freed at the prod step
+            consg = np.insert(consg, lo[z], prod_sg[z])
+            counts = np.where(z, 1, counts)
+        cons_split = np.empty(len(counts), dtype=np.int64)
+        cons_split[0] = 0
+        np.cumsum(counts[:-1], out=cons_split[1:])
+        mem = LifetimePlan(
+            n_steps=NG,
+            static=self.static,
+            static_by_cat=dict(self.static_by_cat),
+            prod_sg=prod_sg,
+            nbytes=nbytes,
+            cats=cats,
+            cons_flat=consg,
+            cons_split=cons_split,
+            fetch_idx=_EMPTY_I64,
+            spill_bytes=0,
+        )
+
+        # consumer-slice lookup for dirty-group costing (reads of tensor t
+        # with multiplicity live at crN[lo[tindex[t]]:hi[tindex[t]]])
+        tindex = np.empty(T + nt, dtype=np.int64)
+        tindex[Pt] = np.arange(len(Pt), dtype=np.int64)
+
+        # ---- per-group costs through the engine's content-keyed caches ----
+        touched = set(rew_set)
+        for t in changed:
+            p = prod[t]
+            if p >= 0:
+                touched.add(p)
+        bound = self.bound
+        names = self.names
+        cost1 = self._cost1
+        gc = self._grp_cache
+        costs: list = []
+        for grp in part:
+            if len(grp) == 1:
+                v = grp[0]
+                s = v if v < N else clone_src[v - N]
+                c = cost1[s]
+                if c is None:
+                    # a singleton's cost depends only on its zmask triple,
+                    # which a clone shares with its source — node-level
+                    # reuse regardless of rewiring
+                    c = cost1[s] = bound.subgraph_cost((names[s],))
+            else:
+                clean = True
+                for v in grp:
+                    if v >= N or v in touched:
+                        clean = False
+                        break
+                if clean:
+                    k = tuple(grp)
+                    c = gc.get(k)
+                    if c is None:
+                        # untouched fused group ≡ the same subgraph of the
+                        # base graph: cost through the base binding
+                        c = gc[k] = bound.subgraph_cost(
+                            tuple(names[v] for v in grp))
+                else:
+                    c = self._multi_cost(
+                        grp, clone_src, clone_ins, clone_outs, patched_ins,
+                        prodof, tindex, lo, hi, crN, new_t_src)
+            costs.append(c)
+
+        # ---- list schedule + profile (scheduling._assemble_fast) ----------
+        from .scheduling import _finish_perm, _list_schedule
+        makespan, busy, finish = _list_schedule(
+            _MiniPlan(NG, succ_lists, prio, indeg_l), costs)
+        prof = lifetime_profile(mem, _finish_perm(finish))
+        energy = sum(c.energy_pj for c in costs) + makespan * self.leak
+        return (makespan, energy, prof.peak)
+
+    def _multi_cost(self, grp, clone_src, clone_ins, clone_outs, patched_ins,
+                    prodof, tindex, lo, hi, crN, new_t_src):
+        """``BoundEngine.subgraph_cost`` on the phenotype's array view for a
+        fused group touched by the rewrite, using the base node objects
+        (clone signatures equal their source's, so keys, cycles and byte
+        sums are identical — docs/engine.md)."""
+        N = self.N
+        T = self.T
+        eng = self.engine
+        bound = self.bound
+        sid = self.sid
+        core_name = self.core_name
+        tbytes = self.tbytes
+        ins_l = self.ins_l
+        outs_l = self.outs_l
+        nodeset = set(grp)
+        srcs = [v if v < N else clone_src[v - N] for v in grp]
+        g_ins = [patched_ins.get(v, ins_l[v]) if v < N
+                 else clone_ins[v - N] for v in grp]
+        g_outs = [outs_l[v] if v < N else clone_outs[v - N] for v in grp]
+        internal: set = set()
+        cons_of: dict = {}
+        for outs in g_outs:
+            for t in outs:
+                ix = tindex[t]
+                cs = crN[lo[ix]:hi[ix]]
+                if cs.size:
+                    inside = True
+                    for c in cs:
+                        if c not in nodeset:
+                            inside = False
+                            break
+                    if inside:
+                        internal.add(t)
+                        cons_of[t] = cs
+        triples: list = []
+        resident: set = set()
+        for ins, outs, s in zip(g_ins, g_outs, srcs, strict=True):
+            rmask = tuple((t in resident or t in internal) for t in ins)
+            imask = tuple((t in internal) for t in outs)
+            triples.append((sid[s], rmask, imask))
+            resident.update(outs)
+        link = 0.0
+        internal_bytes = 0
+        for t in internal:
+            tb = tbytes[t] if t < T else tbytes[new_t_src[t - T]]
+            internal_bytes += tb
+            p = prodof(t)
+            pc = core_name[p if p < N else clone_src[p - N]]
+            for c in cons_of[t]:
+                cc = int(c)
+                if core_name[cc if cc < N else clone_src[cc - N]] != pc:
+                    link += tb
+        key = (tuple(triples), link, internal_bytes)
+        cached = eng._sg.get(key)
+        if cached is not None:
+            eng.stats["sg_hits"] += 1
+            return cached
+        eng.stats["sg_misses"] += 1
+        per_core: dict = {}
+        offchip = local = energy = 0.0
+        node_objs = self.node_objs
+        resource = self.resource
+        ckey = self.ckey
+        for s, tri in zip(srcs, triples, strict=True):
+            nd = node_objs[s]
+            c = bound.node_cost(nd, *tri)
+            cname = resource[s]
+            cyc = bound._cycles(ckey[s], tri[0], nd)
+            per_core[cname] = per_core.get(cname, 0.0) + cyc
+            offchip += c.offchip_bytes
+            local += c.local_bytes
+            energy += c.energy_pj
+        res = subgraph_tail(per_core, offchip, local, link, energy,
+                            internal_bytes, eng._compute, eng._simd, eng.hda)
+        eng._sg[key] = res
+        return res

@@ -14,7 +14,7 @@ from .engine import get_engine
 from .fusion_search import FusionSearchConfig, fusion_partition
 from .graph import WorkloadGraph
 from .memory import local_capacity
-from .scheduling import schedule
+from .scheduling import schedule, schedule_batch
 from .verify import verify_result
 
 
@@ -66,32 +66,56 @@ def _partition_for(g: WorkloadGraph, hda: HDASpec, wname: str, fusion: str,
 
 def sweep(make_hda, space: dict, workloads: dict, sample: int | None = None,
           seed: int = 0, fusion: str = "manual",
-          fusion_cfg=None) -> list[DSEPoint]:
+          fusion_cfg=None, use_batch: bool = True) -> list[DSEPoint]:
     """Evaluate every (or ``sample`` random) config in ``space`` on each
     workload graph.  ``workloads``: name → WorkloadGraph.  ``fusion``
     selects the partition per point: ``none`` / ``manual`` / ``greedy``
     (SRAM-feasible growth) / ``solver`` (exact-cover IP) / ``search``
     (boundary-genome NSGA-II, budget via ``fusion_cfg`` — see
-    ``repro.core.fusion_search``)."""
+    ``repro.core.fusion_search``).  ``use_batch`` scores the whole grid in
+    one :func:`~repro.core.scheduling.schedule_batch` pass (plan sharing
+    across architectures, vectorized memory profiles — docs/engine.md);
+    results are bit-for-bit equal to the scalar loop."""
     configs = grid(space)
     if sample is not None and sample < len(configs):
         rng = random.Random(seed)
         configs = rng.sample(configs, sample)
     parts: dict = {}
     points: list[DSEPoint] = []
-    for cfg in configs:
-        hda = make_hda(**cfg)
-        # one engine per architecture; graph-side signature tables are shared
-        # across every config in the sweep (cached on the graphs), so only
-        # architecture-dependent cost arithmetic is re-evaluated per point
-        engine = get_engine(hda)
-        results = {}
-        for wname, g in workloads.items():
-            part, quotient = _partition_for(g, hda, wname, fusion, parts,
-                                            engine, fusion_cfg)
-            results[wname] = schedule(g, hda, part, engine=engine,
-                                      quotient=quotient)
-        points.append(DSEPoint(cfg, hda.name, results))
+    if use_batch:
+        jobs: list = []
+        metas: list = []               # (cfg, hda, workload -> job index)
+        for cfg in configs:
+            hda = make_hda(**cfg)
+            engine = get_engine(hda)
+            idx = {}
+            for wname, g in workloads.items():
+                part, quotient = _partition_for(g, hda, wname, fusion,
+                                                parts, engine, fusion_cfg)
+                if part is None:       # the scalar default: one node per step
+                    part = [(n,) for n in g.topo_order()]
+                idx[wname] = len(jobs)
+                jobs.append((g, hda, part, quotient))
+            metas.append((cfg, hda, idx))
+        scored = schedule_batch(jobs)
+        points = [DSEPoint(cfg, hda.name,
+                           {w: scored[i] for w, i in idx.items()})
+                  for (cfg, hda, idx) in metas]
+    else:
+        for cfg in configs:
+            hda = make_hda(**cfg)
+            # one engine per architecture; graph-side signature tables are
+            # shared across every config in the sweep (cached on the
+            # graphs), so only architecture-dependent cost arithmetic is
+            # re-evaluated per point
+            engine = get_engine(hda)
+            results = {}
+            for wname, g in workloads.items():
+                part, quotient = _partition_for(g, hda, wname, fusion,
+                                                parts, engine, fusion_cfg)
+                results[wname] = schedule(g, hda, part, engine=engine,
+                                          quotient=quotient)
+            points.append(DSEPoint(cfg, hda.name, results))
     # certify the sweep winner per workload (min latency): one verifier
     # sweep per workload, not per config — the M/S/C findings land on the
     # winning DSEPoint (empty list = clean)

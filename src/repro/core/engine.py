@@ -345,6 +345,8 @@ class EvalEngine:
         self._sg: dict[tuple, NodeCost] = {}      # subgraph signature
         self._sched: OrderedDict = OrderedDict()  # (fingerprint, partition)
         self._sched_cap = 256
+        self._pop_evals: OrderedDict = OrderedDict()  # (fp, acts, fusion)
+        self._pop_evals_cap = 8
         self.stats = dict(node_hits=0, node_misses=0, sg_hits=0,
                           sg_misses=0, sched_hits=0, sched_misses=0)
 
@@ -354,12 +356,14 @@ class EvalEngine:
         if self._gen != _SIG_GEN:   # intern table was cleared: ids reassigned
             self._sg.clear()
             self._sched.clear()
+            self._pop_evals.clear()
             self._gen = _SIG_GEN
 
     def clear(self) -> None:
         """Explicitly drop this engine's caches (testing / memory pressure)."""
         self._sg.clear()
         self._sched.clear()
+        self._pop_evals.clear()
 
     def core_for_class(self, op_class: str) -> CoreSpec:
         if op_class in ("conv", "gemm"):
@@ -408,6 +412,48 @@ class EvalEngine:
         self._sched[key] = result
         if len(self._sched) > self._sched_cap:
             self._sched.popitem(last=False)
+
+    # -- batched population scoring -----------------------------------------
+
+    def population_evaluator(self, tg, fusion: str = "manual"):
+        """Memoized :class:`~repro.core.batch.PopulationEvaluator` for one
+        training graph.  Keyed on the graph's content fingerprint (plus the
+        activation list and fusion mode), so successive searches over the
+        same workload — GA restarts, DSE sweep rows, min-of-N benchmark
+        repeats — reuse already-scored phenotypes exactly like the schedule
+        memo reuses schedules (docs/engine.md, batched evaluation)."""
+        from .batch import PopulationEvaluator
+        self._check_gen()
+        key = (self.bind(tg.graph).fingerprint(),
+               tuple(tg.activations), fusion)
+        ev = self._pop_evals.get(key)
+        if ev is None:
+            ev = PopulationEvaluator(tg, self.hda, engine=self,
+                                     fusion=fusion)
+            self._pop_evals[key] = ev
+            if len(self._pop_evals) > self._pop_evals_cap:
+                self._pop_evals.popitem(last=False)
+        else:
+            self._pop_evals.move_to_end(key)
+        return ev
+
+    def score_batch(self, jobs: list, processes: int | None = None) -> list:
+        """Score ``(graph, hda-or-None, partition[, quotient])`` jobs in one
+        vectorized pass — the engine-level entry to
+        :func:`repro.core.scheduling.schedule_batch` (jobs with ``None`` HDA
+        run on this engine's HDA).  Bit-for-bit equal to the scalar loop."""
+        from .scheduling import schedule_batch
+        full = []
+        for job in jobs:
+            g, hda, part = job[0], job[1], job[2]
+            q = job[3] if len(job) > 3 else None
+            full.append((g, hda if hda is not None else self.hda, part, q))
+        # this engine serves the whole batch only when every job runs on its
+        # HDA; mixed-architecture batches resolve engines per job
+        same = all(h is self.hda for (_, h, _, _) in full)
+        return schedule_batch(full, engine=self if same else None,
+                              tensor_parallel=self.tensor_parallel,
+                              processes=processes)
 
 
 class BoundEngine:

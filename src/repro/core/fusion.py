@@ -15,13 +15,18 @@
     (Σ_{v∈g} o_v ≤ 1), so fused subgraphs never spill intermediates off-chip.
 
 3.  **Integer program** — exact cover of V minimizing Σ x_g (number of
-    subgraphs), solved by branch-and-bound with a greedy incumbent and a
-    time budget (the paper itself uses a heuristic objective).
+    subgraphs).  Solved by a memoized interval DP over the topo index
+    (state = first-uncovered index + the bitmask of covered-ahead nodes;
+    every usable candidate at a state starts exactly at its first-uncovered
+    index), which proves optimality in tens of milliseconds where the
+    legacy branch-and-bound burned its whole time budget; the BnB with a
+    greedy incumbent is kept as the fallback for adversarial state spaces.
 """
 
 from __future__ import annotations
 
 import math
+import sys
 import time
 from dataclasses import dataclass
 
@@ -92,69 +97,121 @@ def enumerate_candidates(g: WorkloadGraph, hda: HDASpec,
     tiling = [sigs.tiling[ix.order[i]] for i in range(n)]
     nbytes = [sigs.io_bytes[ix.order[i]] for i in range(n)]
 
-    def compat(ts: list[int], t: int) -> bool:
-        return all(a % t == 0 or t % a == 0 for a in ts if a > 1) or t == 1
-
-    candidates: set[frozenset] = set()
+    candidates: set[int] = set()        # node-index bitmasks, |S| >= 2
     deadline = time.monotonic() + cfg.time_limit_s
+    # per-node pred/succ bitmasks: convexity and frontier updates become
+    # single big-int operations instead of per-edge Python loops
+    pmask = [0] * n
+    smask = [0] * n
+    for v in range(n):
+        for p in ix.preds[v]:
+            pmask[v] |= 1 << p
+        for s in ix.succs[v]:
+            smask[v] |= 1 << s
+    op_counts = [_op_counts(ix.node(i)) for i in range(n)]
+    fusable = [ix.node(i).op_class not in ("comm", "dma") for i in range(n)]
+    # collectives / DMA transfers run on their own resource (ici / dma):
+    # never fused with compute
+    enforce_tiling, enforce_memory = cfg.enforce_tiling, cfg.enforce_memory
+    max_conv, max_gemm, max_len = cfg.max_conv, cfg.max_gemm, cfg.max_len
 
     for seed in range(n):
         if time.monotonic() > deadline or len(candidates) >= cfg.max_candidates:
             break
-        if ix.node(seed).op_class in ("comm", "dma"):
-            continue    # collectives / DMA transfers run on their own
-            # resource (ici / dma): never fused with compute
-        seed_desc = ix.desc[seed]
+        if not fusable[seed]:
+            continue
+        # nodes reachable from the seed: only their preds gate convexity
+        reach = ix.desc[seed] | (1 << seed)
         per_seed = 0
-        # DFS over grow decisions
-        init_counts = _op_counts(ix.node(seed))
-        stack = [(frozenset([seed]), init_counts,
-                  [tiling[seed]] if tiling[seed] > 1 else [])]
-        seen_states: set[frozenset] = set()
+        t0 = tiling[seed]
+        b0 = float(nbytes[seed])
+        S0 = 1 << seed
+        f0 = 0
+        m = smask[seed]
+        while m:
+            low = m & -m
+            m ^= low
+            v = low.bit_length() - 1
+            if not pmask[v] & reach & ~S0:
+                f0 |= low
+        # DFS over grow decisions; each state carries its bitmask, size,
+        # (conv, gemm) counts, tiling factors > 1, the working-set sums
+        # (s1 = Σ bytes of t==1 members, s2 = Σ bytes of t>1 members, their
+        # min tiling) and the eligible-frontier bitmask — all updated in
+        # O(1)/O(deg) per grow instead of rescanning the whole subgraph
+        stack = [(S0, 1, op_counts[seed],
+                  (t0,) if t0 > 1 else (),
+                  0.0 if t0 > 1 else b0, b0 if t0 > 1 else 0.0,
+                  t0 if t0 > 1 else 0, f0)]
+        seen_states: set[int] = set()
         while stack and per_seed < cfg.max_per_seed:
-            S, counts, ts = stack.pop()
-            if len(S) >= 2 and S not in candidates:
+            S, size, counts, ts, s1, s2, tmin, frontier = stack.pop()
+            if size >= 2 and S not in candidates:
                 candidates.add(S)
                 per_seed += 1
-            if len(S) >= cfg.max_len:
+            if size >= max_len:
                 continue
-            # eligible frontier: successors of S, convexity-safe
-            frontier = set()
-            for u in S:
-                for v in ix.succs[u]:
-                    if v in S or v in frontier:
-                        continue
-                    if all((p in S) or not ((seed_desc >> p) & 1 or p == seed)
-                           for p in ix.preds[v]):
-                        frontier.add(v)
-            for v in sorted(frontier):
-                nd = ix.node(v)
-                if nd.op_class in ("comm", "dma"):
+            fm = frontier
+            while fm:                       # frontier bits, ascending
+                low = fm & -fm
+                fm ^= low
+                v = low.bit_length() - 1
+                if not fusable[v]:
                     continue
-                c2 = _add_counts(counts, nd)
-                if c2[0] > cfg.max_conv or c2[1] > cfg.max_gemm:
+                ca, cb = op_counts[v]
+                ca += counts[0]
+                cb += counts[1]
+                if ca > max_conv or cb > max_gemm:
                     continue
                 t = tiling[v]
-                if cfg.enforce_tiling and not compat(ts, t):
+                if enforce_tiling and t > 1 and \
+                        any(a % t and t % a for a in ts):
                     continue
-                S2 = S | {v}
+                S2 = S | low
                 if S2 in seen_states:
                     continue
-                if cfg.enforce_memory:
-                    # shared tile-working-set constraint (memory model)
-                    ws = tile_working_set((nbytes[i] for i in S2),
-                                          (tiling[i] for i in S2))
-                    if ws > cap:
-                        continue
+                b = float(nbytes[v])
+                if t > 1:
+                    n1, n2 = s1, s2 + b
+                    nt = t if not tmin or t < tmin else tmin
+                else:
+                    n1, n2 = s1 + b, s2
+                    nt = tmin
+                if enforce_memory and \
+                        n1 + (n2 / nt if nt else 0.0) > cap:
+                    # shared tile-working-set constraint (memory model):
+                    # same arithmetic as memory.tile_working_set
+                    continue
                 seen_states.add(S2)
-                stack.append((S2, c2, ts + ([t] if t > 1 else [])))
+                # grown frontier: drop v, add v's now-eligible successors
+                # (adding v only ever unblocks successors of v)
+                nf = frontier & ~low
+                nm = smask[v] & ~S2 & ~nf
+                while nm:
+                    wl = nm & -nm
+                    nm ^= wl
+                    if not pmask[wl.bit_length() - 1] & reach & ~S2:
+                        nf |= wl
+                stack.append((S2, size + 1, (ca, cb),
+                              ts + ((t,) if t > 1 else ()),
+                              n1, n2, nt, nf))
 
     # post filter: ≤ 1 node with outgoing external edges
     out: list[tuple] = []
-    for S in candidates:
-        if cfg.enforce_single_output and _external_outputs(ix, S) > 1:
+    for m in candidates:
+        S: list[int] = []
+        ext = 0
+        mm = m
+        while mm:
+            low = mm & -mm
+            mm ^= low
+            u = low.bit_length() - 1
+            S.append(u)
+            if smask[u] & ~m:
+                ext += 1
+        if cfg.enforce_single_output and ext > 1:
             continue
-        out.append(tuple(sorted(S)))
+        out.append(tuple(S))
     # singletons are always valid
     out.extend((i,) for i in range(n))
     out.sort(key=lambda s: (-len(s), s))
@@ -300,8 +357,127 @@ def greedy_sram_partition(g: WorkloadGraph, hda: HDASpec,
 # ---------------------------------------------------------------------------
 
 
+class _DPOverflow(Exception):
+    """Raised when the exact-cover DP exceeds its state or time budget."""
+
+
+def _solve_cover_dp(n_nodes: int, cands: list[tuple], idx_of: dict,
+                    time_limit_s: float, max_states: int) -> list[tuple]:
+    """Memoized exact cover:  dp(i, covered) = minimum number of candidates
+    partitioning nodes ``i..n`` given ``covered`` (all indices < i covered).
+    Key insight: a candidate usable at the first-uncovered index ``i`` must
+    *contain* i and be disjoint from ``covered``, hence its minimum index is
+    exactly ``i`` — so candidates bucket by their minimum index and the memo
+    key is ``(i, covered >> i)`` (an arbitrary-precision bitmask, cheap at
+    these sizes).  Deterministic: ties keep the earliest candidate in the
+    enumeration's canonical (-len, lexicographic) order."""
+    masks: list[int] = []
+    by_min: list[list[tuple]] = [[] for _ in range(n_nodes)]
+    for si, c in enumerate(cands):
+        s = sorted(idx_of[x] for x in c)
+        m = 0
+        for i in s:
+            m |= 1 << i
+        masks.append(m)
+        by_min[s[0]].append((m, si))
+    deadline = time.monotonic() + time_limit_s
+    # memo[i]: ahead-bitmask (covered >> i) -> (count, chosen si)
+    memo: list[dict] = [{} for _ in range(n_nodes)]
+    inf = n_nodes + 1
+    ticks = 0
+    n_states = 0
+
+    def dp(i: int, covered: int) -> int:
+        nonlocal ticks, n_states
+        while (covered >> i) & 1:
+            i += 1
+        if i >= n_nodes:
+            return 0
+        mi = memo[i]
+        ahead = covered >> i
+        hit = mi.get(ahead)
+        if hit is not None:
+            return hit[0]
+        ticks += 1
+        if not ticks & 0x3FF and (time.monotonic() > deadline
+                                  or n_states > max_states):
+            raise _DPOverflow
+        best_cnt, best_si = inf, -1
+        for m, si in by_min[i]:
+            if m & covered:
+                continue
+            cnt = dp(i + 1, covered | m) + 1
+            if cnt < best_cnt:
+                best_cnt, best_si = cnt, si
+        mi[ahead] = (best_cnt, best_si)
+        n_states += 1
+        return best_cnt
+
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, n_nodes + 200))
+    try:
+        if dp(0, 0) > n_nodes:
+            raise _DPOverflow    # no cover (unreachable: singletons exist)
+    finally:
+        sys.setrecursionlimit(old_limit)
+    # reconstruct the optimal cover by replaying the memoized choices
+    out: list[tuple] = []
+    i, covered = 0, 0
+    while True:
+        while (covered >> i) & 1:
+            i += 1
+        if i >= n_nodes:
+            break
+        si = memo[i][covered >> i][1]
+        out.append(cands[si])
+        covered |= masks[si]
+    return out
+
+
 def solve_cover(n_nodes: int, cands: list[tuple], idx_of: dict,
-                time_limit_s: float = 10.0) -> list[tuple]:
+                time_limit_s: float = 10.0,
+                max_states: int = 500_000) -> list[tuple]:
+    """Minimum-cardinality exact cover.  ``cands`` are tuples of node names;
+    returns a partition.  The memoized DP (:func:`_solve_cover_dp`) proves
+    optimality fast on real fusion instances; if it exceeds its state cap or
+    half the time budget, the legacy branch-and-bound with a greedy
+    incumbent finishes the job within the remaining budget."""
+    start = time.monotonic()
+    if n_nodes <= 2000:
+        try:
+            return _solve_cover_dp(n_nodes, cands, _cluster_index(cands, idx_of),
+                                   time_limit_s * 0.5, max_states)
+        except _DPOverflow:
+            pass
+    remaining = max(0.05, time_limit_s - (time.monotonic() - start))
+    return _solve_cover_bnb(n_nodes, cands, idx_of, remaining)
+
+
+def _cluster_index(cands: list[tuple], idx_of: dict) -> dict:
+    """Re-index nodes so candidate members sit contiguously where possible.
+    The cover itself is index-independent — only the DP's state space cares,
+    and its ahead-bitmasks feed on span locality: a candidate pairing an
+    early producer with a late consumer (weight transposes, recompute
+    clones) would otherwise thread a covered-ahead bit through hundreds of
+    intermediate states.  Greedy first-come placement in candidate order
+    (earliest original member, largest first) keeps it deterministic."""
+    order = sorted(
+        range(len(cands)),
+        key=lambda si: (min(idx_of[x] for x in cands[si]),
+                        -len(cands[si]), cands[si]))
+    new_idx: dict = {}
+    for si in order:
+        for x in sorted(cands[si], key=idx_of.__getitem__):
+            if x not in new_idx:
+                new_idx[x] = len(new_idx)
+    for x in idx_of:                     # nodes outside every candidate
+        if x not in new_idx:
+            new_idx[x] = len(new_idx)
+    return new_idx
+
+
+def _solve_cover_bnb(n_nodes: int, cands: list[tuple], idx_of: dict,
+                     time_limit_s: float = 10.0) -> list[tuple]:
     """Branch-and-bound minimum-cardinality exact cover with a greedy
     incumbent.  ``cands`` are tuples of node names; returns a partition."""
     sets = [frozenset(idx_of[x] for x in c) for c in cands]

@@ -18,6 +18,7 @@ Conventions
 
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
 from functools import cached_property
@@ -289,22 +290,42 @@ class WorkloadGraph:
     def topo_order(self) -> list[str]:
         """Topological node order, cached per structural version.  The
         returned list is shared (and carried over by ``copy()``) — callers
-        must not mutate it."""
+        must not mutate it.
+
+        The order is *canonical*: heap-Kahn keyed by (structural depth,
+        registration serial), where depth(n) = 1 + max(depth(preds)) and
+        the serial is the node's insertion index (nodes are never removed).
+        It depends only on the node registration sequence and the edge
+        *set*, never on consumer-list ordering or mutation history, so any
+        construction path that registers the same nodes in the same order
+        (e.g. the engine's batched phenotype evaluator, which never
+        materializes a WorkloadGraph at all) reproduces it bit-for-bit.
+        Depth-major keeps the BFS-layer character of the order: nodes
+        spliced in by rewrites (recompute clones, DMA transfers) sort next
+        to their structural layer, not at the back of the registration —
+        DMA offloads in particular must sit early so the lifetime model
+        sees the offloaded tensor die early."""
         if self._topo is not None and self._topo[0] == self._version:
             return self._topo[1]
         preds, succs = self.adjacency()
+        names = list(self.nodes)
+        serial = {n: i for i, n in enumerate(names)}
         indeg = {n: len(ps) for n, ps in preds.items()}
-        ready = sorted(n for n, d in indeg.items() if d == 0)
+        depth = {n: 0 for n in names}
+        heap = [(0, i) for i, n in enumerate(names) if indeg[n] == 0]
+        heapq.heapify(heap)
         out: list[str] = []
-        from collections import deque
-        q = deque(ready)
-        while q:
-            n = q.popleft()
+        while heap:
+            d, i = heapq.heappop(heap)
+            n = names[i]
             out.append(n)
+            d += 1
             for s in succs[n]:
+                if depth[s] < d:
+                    depth[s] = d
                 indeg[s] -= 1
                 if indeg[s] == 0:
-                    q.append(s)
+                    heapq.heappush(heap, (depth[s], serial[s]))
         if len(out) != len(self.nodes):
             cyc = set(self.nodes) - set(out)
             raise GraphError(f"graph has a cycle involving {sorted(cyc)[:5]}")

@@ -258,6 +258,53 @@ def lifetime_profile(plan: LifetimePlan, perm: np.ndarray) -> MemProfile:
     return MemProfile(peak, breakdown, act_peak)
 
 
+def lifetime_profile_batch(plan: LifetimePlan, perms: list) -> list:
+    """Batched interval peaks: exactly ``[lifetime_profile(plan, p) for p in
+    perms]`` (same integer arithmetic, same first-argmax peak step), computed
+    in one vectorized pass over a ``(B, n_steps)`` permutation matrix.  Used
+    by ``scheduling.schedule_batch`` when many finish orders share one
+    lifetime plan — e.g. a DSE row evaluating the same (graph, partition)
+    on every architecture of the grid."""
+    ncat = len(MEM_CATEGORIES)
+    static_bd = plan.static_by_cat
+    nb = len(perms)
+    if plan.prod_sg.size == 0:
+        return [MemProfile(plan.static,
+                           {c: static_bd.get(c, 0) for c in MEM_CATEGORIES},
+                           0) for _ in range(nb)]
+    P = np.stack(perms)                       # (B, n_steps)
+    s_arr = P[:, plan.prod_sg]                # (B, n_tensors)
+    cf = P[:, plan.cons_flat]
+    e_arr = np.maximum.reduceat(cf, plan.cons_split, axis=1)
+    if plan.fetch_idx is not None and plan.fetch_idx.size:
+        first_use = np.minimum.reduceat(cf, plan.cons_split, axis=1)
+        s_arr = s_arr.copy()
+        s_arr[:, plan.fetch_idx] = first_use[:, plan.fetch_idx]
+    rows = np.arange(nb)[:, None]
+    cats = plan.cats[None, :]
+    deltas = np.zeros((nb, plan.n_steps + 1, ncat), dtype=np.int64)
+    np.add.at(deltas, (rows, s_arr, cats), plan.nbytes)
+    np.add.at(deltas, (rows, e_arr + 1, cats), -plan.nbytes)
+    cum = np.cumsum(deltas, axis=1)
+    totals = cum.sum(axis=2)
+    steps = np.argmax(totals, axis=1)         # first max, like the scalar path
+    extras = totals[np.arange(nb), steps]
+    act_peaks = np.maximum(cum[:, :, _ACT_CODE].max(axis=1), 0)
+    out = []
+    for b in range(nb):
+        extra = int(extras[b])
+        if extra > 0:
+            peak = plan.static + extra
+            at = cum[b, steps[b]]
+        else:
+            peak = plan.static
+            at = np.zeros(ncat, dtype=np.int64)
+        breakdown = {c: static_bd.get(c, 0) + int(at[ci])
+                     for ci, c in enumerate(MEM_CATEGORIES)}
+        out.append(MemProfile(peak, breakdown, int(act_peaks[b])))
+    return out
+
+
 def schedule_priorities(graph: WorkloadGraph, partition: list,
                         topo_idx: dict | None = None,
                         has_fetch: bool | None = None) -> list[int]:

@@ -117,7 +117,8 @@ def _evolve(evaluate, X: np.ndarray, rng, generations: int,
             snapshot_every: int = 0, snapshot_path: str | None = None,
             resume: dict | str | None = None,
             max_seconds: float | None = None,
-            max_evals: int | None = None) -> NSGA2Result:
+            max_evals: int | None = None,
+            evaluate_batch=None) -> NSGA2Result:
     """Shared NSGA-II core: binary-tournament selection, elitist (μ+λ)
     survival with crowding truncation, and Pareto-front dedup.  The genome
     representation lives entirely in the ``crossover(a, b)`` / ``mutate(c)``
@@ -129,9 +130,20 @@ def _evolve(evaluate, X: np.ndarray, rng, generations: int,
     run — the resumed front is bit-for-bit identical to the uninterrupted
     one.  ``max_seconds`` / ``max_evals`` stop early and return the
     best-so-far front; neither consumes RNG draws, so enabling them never
-    perturbs the search trajectory."""
+    perturbs the search trajectory.
+
+    ``evaluate_batch(X) -> list of objective tuples`` scores a whole
+    population in one call (engine ``score_batch`` path, docs/engine.md);
+    it must agree with ``evaluate`` bit-for-bit and consumes no RNG, so
+    toggling it never changes the trajectory."""
     t0 = time.monotonic()
     n_evals = 0
+
+    def eval_pop(P: np.ndarray) -> np.ndarray:
+        if evaluate_batch is not None:
+            return np.array(evaluate_batch(P), dtype=float)
+        return np.array([evaluate(x) for x in P], dtype=float)
+
     if resume is not None:
         state = load_snapshot(resume) if isinstance(resume, str) else resume
         dtype = np.bool_ if state["dtype"] == "bool" else int
@@ -141,7 +153,7 @@ def _evolve(evaluate, X: np.ndarray, rng, generations: int,
         start_gen = int(state["generation"])
         rng.bit_generator.state = state["rng_state"]
     else:
-        F = np.array([evaluate(x) for x in X], dtype=float)
+        F = eval_pop(X)
         n_evals = X.shape[0]
         history = []
         start_gen = 0
@@ -168,7 +180,7 @@ def _evolve(evaluate, X: np.ndarray, rng, generations: int,
                 mutate(c)
                 children.append(c)
         C = np.array(children[:pop_size])
-        CF = np.array([evaluate(c) for c in C], dtype=float)
+        CF = eval_pop(C)
         n_evals += pop_size
 
         # elitist (μ+λ) survival
@@ -207,7 +219,7 @@ def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
           p_mutation: float | None = None, init: np.ndarray | None = None,
           snapshot_every: int = 0, snapshot_path: str | None = None,
           resume: dict | str | None = None, max_seconds: float | None = None,
-          max_evals: int | None = None) -> NSGA2Result:
+          max_evals: int | None = None, evaluate_batch=None) -> NSGA2Result:
     """``evaluate(mask: np.ndarray[bool]) -> tuple`` of objectives (minimize)."""
     rng = np.random.default_rng(seed)
     p_mut = p_mutation if p_mutation is not None else 1.0 / max(n_var, 1)
@@ -229,7 +241,8 @@ def nsga2(evaluate, n_var: int, pop_size: int = 32, generations: int = 25,
     return _evolve(evaluate, X, rng, generations, p_crossover,
                    crossover, mutate, snapshot_every=snapshot_every,
                    snapshot_path=snapshot_path, resume=resume,
-                   max_seconds=max_seconds, max_evals=max_evals)
+                   max_seconds=max_seconds, max_evals=max_evals,
+                   evaluate_batch=evaluate_batch)
 
 
 def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
@@ -239,7 +252,8 @@ def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
               snapshot_every: int = 0, snapshot_path: str | None = None,
               resume: dict | str | None = None,
               max_seconds: float | None = None,
-              max_evals: int | None = None) -> NSGA2Result:
+              max_evals: int | None = None,
+              evaluate_batch=None) -> NSGA2Result:
     """Integer-genome NSGA-II for categorical/mixed search spaces (chip count
     × parallelism strategy × checkpointing budget — see
     ``repro.core.parallel.ga_parallel`` — and the ternary activation-policy
@@ -274,4 +288,5 @@ def nsga2_int(evaluate, bounds: list, pop_size: int = 16,
     return _evolve(evaluate, X, rng, generations, p_crossover,
                    crossover, mutate, snapshot_every=snapshot_every,
                    snapshot_path=snapshot_path, resume=resume,
-                   max_seconds=max_seconds, max_evals=max_evals)
+                   max_seconds=max_seconds, max_evals=max_evals,
+                   evaluate_batch=evaluate_batch)

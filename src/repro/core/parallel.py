@@ -671,7 +671,8 @@ def ga_parallel(tg: TrainingGraph, make_cluster, chip_counts: list,
                 snapshot_path: str | None = None,
                 resume: dict | str | None = None,
                 max_seconds: float | None = None,
-                max_evals: int | None = None):
+                max_evals: int | None = None,
+                use_batch: bool = True):
     """Joint search over (chip count × parallelism strategy × activation-
     checkpointing budget) with NSGA-II over an integer genome, minimizing
     (−throughput, energy, per-chip peak mem).  ``make_cluster(n)`` builds
@@ -726,11 +727,31 @@ def ga_parallel(tg: TrainingGraph, make_cluster, chip_counts: list,
         cache[key] = out
         return out
 
+    evaluate_batch = None
+    if use_batch:
+        # population-level scoring: the integer genome is modular, so many
+        # genomes decode to one (chips, strategy, keep_frac) phenotype —
+        # dedup on the decoded key and score each unique phenotype once
+        # (bit-for-bit equal to the scalar loop, which hits ``cache``)
+        def evaluate_batch(P) -> list:
+            by_key: dict[tuple, list] = {}
+            keys = []
+            for i, genome in enumerate(P):
+                cluster, strat, frac = decode(genome)
+                key = (cluster.n_chips, strat, frac)
+                keys.append(key)
+                if key not in cache:
+                    by_key.setdefault(key, []).append(i)
+            for key, idxs in by_key.items():
+                evaluate(P[idxs[0]])    # populates cache[key]
+            return [cache[k] for k in keys]
+
     res = nsga2_int(evaluate, bounds, pop_size=pop_size,
                     generations=generations, seed=seed,
                     snapshot_every=snapshot_every,
                     snapshot_path=snapshot_path, resume=resume,
-                    max_seconds=max_seconds, max_evals=max_evals)
+                    max_seconds=max_seconds, max_evals=max_evals,
+                    evaluate_batch=evaluate_batch)
     return res, decode
 
 

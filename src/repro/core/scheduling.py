@@ -21,7 +21,7 @@ from .cost_model import CostModel
 from .engine import get_engine
 from .graph import GraphError, WorkloadGraph
 from .memory import (MEM_CATEGORIES, build_lifetime_plan, lifetime_profile,
-                     schedule_priorities)
+                     lifetime_profile_batch, schedule_priorities)
 
 
 @dataclass
@@ -226,9 +226,119 @@ def schedule(graph: WorkloadGraph, hda: HDASpec, partition: list | None = None,
     return _assemble(graph, hda, partition, succ, costs)
 
 
-def _assemble_fast(hda: HDASpec, plan: _Plan, costs: list) -> ScheduleResult:
-    """Array-indexed twin of ``_assemble`` operating on a cached ``_Plan``
-    (bit-for-bit identical results — covered by the parity tests)."""
+def _schedule_batch_worker(chunk: list) -> list:
+    """Fork-pool worker: score one chunk of jobs serially.  Engines are
+    re-created in the child (``get_engine``) — caches populated there never
+    propagate back, only the (picklable) ``ScheduleResult`` values do."""
+    return [schedule(g, hda, part, engine=None, quotient=q)
+            for (g, hda, part, q) in chunk]
+
+
+def schedule_batch(jobs: list, engine=None, tensor_parallel: bool = True,
+                   processes: int | None = None) -> list:
+    """Score a batch of schedule jobs — bit-for-bit equal to the scalar loop
+    ``[schedule(g, hda, part, quotient=q) for (g, hda, part, q) in jobs]``.
+
+    ``jobs``: sequence of ``(graph, hda, partition)`` or
+    ``(graph, hda, partition, quotient)``.  Compared to the scalar loop the
+    batch path (docs/engine.md):
+
+    * dedups identical ``(engine, fingerprint, partition)`` jobs inside the
+      batch — each unique job is costed once;
+    * shares the HDA-independent ``_Plan`` across architectures evaluating
+      the same (graph, partition) pair;
+    * computes every interval-peak memory profile of a shared plan in one
+      vectorized ``lifetime_profile_batch`` pass;
+    * with ``processes=N`` (>1) forks a worker pool and scores independent
+      jobs in parallel (results identical; child-process caches are
+      discarded).  Only worthwhile for many independent architectures on a
+      multi-core host.
+
+    Under ``REPRO_SANITIZE`` the scalar oracle runs instead, so every cache
+    miss keeps its shadow-verification (C-rules)."""
+    jobs = [(j[0], j[1], [tuple(sg) for sg in j[2]],
+             j[3] if len(j) > 3 else None) for j in jobs]
+
+    from .verify import sanitize_enabled
+    if sanitize_enabled():
+        return [schedule(g, hda, part, tensor_parallel, engine, quotient=q)
+                for (g, hda, part, q) in jobs]
+
+    if processes and processes > 1 and len(jobs) > 1:
+        import multiprocessing as mp
+        try:
+            ctx = mp.get_context("fork")
+        except ValueError:          # platform without fork: stay serial
+            ctx = None
+        if ctx is not None:
+            nw = min(processes, len(jobs))
+            chunks = [jobs[i::nw] for i in range(nw)]
+            with ctx.Pool(nw) as pool:
+                outs = pool.map(_schedule_batch_worker, chunks)
+            results = [None] * len(jobs)
+            for w, out in enumerate(outs):
+                for k, res in enumerate(out):
+                    results[w + k * nw] = res
+            return results
+
+    n = len(jobs)
+    results: list = [None] * n
+    first_of: dict[tuple, int] = {}     # dedup key -> first job index
+    pending: list = []                  # (job idx, eng, bound, memo_key, part, q)
+    for i, (g, hda, part, q) in enumerate(jobs):
+        eng = engine if engine is not None else get_engine(hda,
+                                                           tensor_parallel)
+        bound = eng.bind(g)
+        memo_key = (bound.fingerprint(), tuple(part))
+        hit = eng.sched_get(memo_key)
+        if hit is not None:
+            results[i] = hit
+            continue
+        dkey = (id(eng), memo_key)
+        j = first_of.get(dkey)
+        if j is not None:
+            results[i] = ("dup", j)
+            continue
+        first_of[dkey] = i
+        pending.append((i, eng, bound, memo_key, part, q))
+
+    # cost + list-schedule phase; profiles are deferred and grouped per plan
+    staged: list = []                   # (idx, eng, hda, memo, plan, costs,
+    #                                      makespan, busy, perm)
+    by_plan: dict[int, list] = {}       # id(plan) -> staged rows
+    for (i, eng, bound, memo_key, part, q) in pending:
+        g, hda = jobs[i][0], jobs[i][1]
+        plan = _plan_for(g, part, memo_key, q, bound.sigs)
+        costs = [bound.subgraph_cost(sg) for sg in part]
+        makespan, busy, finish = _list_schedule(plan, costs)
+        row = [i, eng, hda, memo_key, plan, costs, makespan, busy,
+               _finish_perm(finish)]
+        staged.append(row)
+        by_plan.setdefault(id(plan), []).append(row)
+
+    for rows in by_plan.values():
+        profs = lifetime_profile_batch(rows[0][4].mem,
+                                       [r[8] for r in rows])
+        for row, prof in zip(rows, profs, strict=True):
+            i, eng, hda, memo_key, plan, costs, makespan, busy, _ = row
+            res = _assemble_result(hda, plan, costs, makespan, busy, prof)
+            eng.sched_put(memo_key, res)
+            results[i] = res
+
+    out = []
+    for r in results:
+        if type(r) is tuple:            # ("dup", first-index) marker
+            r = results[r[1]]
+        out.append(replace(r, per_core_busy=dict(r.per_core_busy),
+                           mem_breakdown=dict(r.mem_breakdown)))
+    return out
+
+
+def _list_schedule(plan, costs: list) -> tuple:
+    """Greedy priority list scheduling over the plan's quotient DAG.  The
+    ``plan`` only needs ``n`` / ``succ`` / ``prio`` / ``indeg`` — the batched
+    phenotype evaluator (``repro.core.batch``) feeds a lightweight stand-in
+    instead of a full ``_Plan``.  Returns ``(makespan, busy, finish)``."""
     n = plan.n
     succ = plan.succ
     prio = plan.prio
@@ -265,16 +375,21 @@ def _assemble_fast(hda: HDASpec, plan: _Plan, costs: list) -> ScheduleResult:
                 heapq.heappush(heap, (prio[j], j))
     if scheduled != n:
         raise GraphError("scheduler deadlock (cycle?)")
+    return makespan, busy, finish
 
-    # memory liveness through the unified lifetime model (topo-step
-    # granularity, integer byte arithmetic — exact, so bit-for-bit equal to
-    # the reference path, which calls the same kernel).
+
+def _finish_perm(finish: list):
+    """``perm[subgraph] = step`` from the finish times (stable on ties)."""
     import numpy as np
+    n = len(finish)
     order = sorted(range(n), key=finish.__getitem__)
     perm = np.empty(n, dtype=np.int64)
     perm[np.asarray(order, dtype=np.int64)] = np.arange(n, dtype=np.int64)
-    prof = lifetime_profile(plan.mem, perm)
+    return perm
 
+
+def _assemble_result(hda: HDASpec, plan: _Plan, costs: list, makespan: float,
+                     busy: dict, prof) -> ScheduleResult:
     energy = sum(c.energy_pj for c in costs) + makespan * hda.leak_per_cycle()
     return ScheduleResult(
         latency=makespan,
@@ -283,7 +398,7 @@ def _assemble_fast(hda: HDASpec, plan: _Plan, costs: list) -> ScheduleResult:
         peak_mem=prof.peak,
         activation_bytes=plan.act_bytes,
         per_core_busy=busy,
-        n_subgraphs=n,
+        n_subgraphs=plan.n,
         total_macs=plan.total_macs,
         hda_name=hda.name,
         mem_breakdown=prof.breakdown,
@@ -291,6 +406,17 @@ def _assemble_fast(hda: HDASpec, plan: _Plan, costs: list) -> ScheduleResult:
         spill_bytes=plan.mem.spill_bytes,
         spill_cycles=busy.get("dma", 0.0),
     )
+
+
+def _assemble_fast(hda: HDASpec, plan: _Plan, costs: list) -> ScheduleResult:
+    """Array-indexed twin of ``_assemble`` operating on a cached ``_Plan``
+    (bit-for-bit identical results — covered by the parity tests).  Memory
+    liveness goes through the unified lifetime model (topo-step granularity,
+    integer byte arithmetic — exact, so bit-for-bit equal to the reference
+    path, which calls the same kernel)."""
+    makespan, busy, finish = _list_schedule(plan, costs)
+    prof = lifetime_profile(plan.mem, _finish_perm(finish))
+    return _assemble_result(hda, plan, costs, makespan, busy, prof)
 
 
 def _assemble(graph: WorkloadGraph, hda: HDASpec, partition: list,

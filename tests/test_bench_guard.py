@@ -1,0 +1,122 @@
+"""Unit tests for the benchmark harness floor + regression-guard parsing.
+
+Two bugs this locks down (ISSUE 8 satellite):
+
+* ``benchmarks.common.emit`` used to record ``us_per_call=0.0`` for
+  sub-timer-resolution entries (``table1_capabilities``,
+  ``milp_vs_ga_same_budget``), which ``check_bench_regression.us_of``
+  then silently dropped — the entries were *never* guarded.  ``emit``
+  now substitutes the measured ``perf_counter`` resolution floor, so
+  every recorded value is positive and finite.
+* ``us_of`` must degrade corrupted records (missing key, strings, NaN,
+  zero/negative, booleans) to a structured skip reason — never a crash,
+  and never a comparison that can't fail (``nan > x`` is always False).
+"""
+
+import importlib.util
+import math
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)           # benchmarks/ is a namespace package
+
+from benchmarks import common  # noqa: E402
+
+
+def _load_guard():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_regression",
+        os.path.join(ROOT, "scripts", "check_bench_regression.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+guard = _load_guard()
+
+
+# ---------------------------------------------------------------------------
+# us_of: corrupted-record handling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("record,reason", [
+    ({}, "missing"),
+    ({"x": "not-a-dict"}, "missing"),
+    ({"x": {"derived": "n=3"}}, "missing"),
+    ({"x": {"us_per_call": None}}, "missing"),
+    ({"x": {"us_per_call": "12.5"}}, "non_numeric"),
+    ({"x": {"us_per_call": True}}, "non_numeric"),
+    ({"x": {"us_per_call": float("nan")}}, "nan"),
+    ({"x": {"us_per_call": float("inf")}}, "non_positive"),
+    ({"x": {"us_per_call": 0.0}}, "non_positive"),
+    ({"x": {"us_per_call": -3.0}}, "non_positive"),
+], ids=["empty", "non_dict", "no_key", "none", "string", "bool", "nan",
+        "inf", "zero", "negative"])
+def test_us_of_degrades_to_skip_reason(record, reason):
+    v, why = guard.us_of(record, "x")
+    assert v is None
+    assert why == reason
+
+
+def test_us_of_accepts_valid_entries():
+    assert guard.us_of({"x": {"us_per_call": 12.5}}, "x") == (12.5, None)
+    assert guard.us_of({"x": {"us_per_call": 3}}, "x") == (3.0, None)
+
+
+def test_guarded_entries_have_rerun_targets():
+    # every hot path the guard compares must be refreshable via --only
+    assert "engine_batch_warm" in guard.HOT_PATHS
+    assert "ga_policy_batched" in guard.HOT_PATHS
+    assert guard.HOT_PATHS["engine_batch_warm"] == "engine_batch"
+
+
+# ---------------------------------------------------------------------------
+# emit: zero/NaN floor substitution
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def records(monkeypatch):
+    fresh: list = []
+    monkeypatch.setattr(common, "RECORDS", fresh)
+    return fresh
+
+
+@pytest.mark.parametrize("raw", [0.0, -1.0, float("nan")],
+                         ids=["zero", "negative", "nan"])
+def test_emit_floors_unmeasurable_timings(records, raw, capsys):
+    common.emit("sub_resolution_entry", raw, "n=1")
+    us = records[0]["us_per_call"]
+    assert math.isfinite(us) and us > 0.0
+    # the floored value survives a guard round-trip as a usable entry
+    v, why = guard.us_of({"sub_resolution_entry": records[0]},
+                         "sub_resolution_entry")
+    assert why is None and v == us
+    assert capsys.readouterr().out.startswith("sub_resolution_entry,")
+
+
+def test_emit_keeps_real_timings_untouched(records):
+    common.emit("real_entry", 2153891.4, "n=1")
+    assert records[0]["us_per_call"] == 2153891.4
+
+
+def test_timer_floor_is_positive_and_cached():
+    a = common.timer_floor_us()
+    assert a > 0.0 and math.isfinite(a)
+    assert common.timer_floor_us() == a
+
+
+def test_timed_min_takes_minimum():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return "out"
+
+    out, us = common.timed_min(fn, repeats=3)
+    assert out == "out" and len(calls) == 3 and us >= 0.0

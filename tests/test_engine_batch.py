@@ -1,0 +1,244 @@
+"""Batched-vs-scalar parity for population evaluation (ISSUE 8).
+
+The batched paths — ``PopulationEvaluator`` (SoA phenotype simulation,
+src/repro/core/batch.py), ``EvalEngine.score_batch`` and the ``use_batch``
+flags on every population loop (``ga_checkpointing`` / ``ga_policy`` /
+``search_fusion`` / ``ga_parallel`` / ``dse.sweep``) — must be *bit-for-bit*
+identical to the scalar reference oracle: same objectives, same Pareto
+fronts, same baselines.  Dedup accounting (identical phenotypes signed
+once) and the sanitizer contract (``REPRO_SANITIZE=1`` forces every
+evaluation through the scalar pipeline, uncached) are locked down here too.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationPolicy, activation_set,
+                        build_training_graph, edge_cluster, edge_tpu,
+                        evaluate_checkpointing, evaluate_policy,
+                        ga_checkpointing, ga_parallel, ga_policy, mlp_graph,
+                        resnet18_graph, schedule, search_fusion)
+from repro.core.batch import PopulationEvaluator
+from repro.core.dse import sweep
+from repro.core.engine import get_engine, sign_count
+from repro.core.fusion_search import FusionSearchConfig
+
+
+@pytest.fixture(scope="module")
+def rn_tg():
+    return build_training_graph(resnet18_graph(1, 32), "adam")
+
+
+@pytest.fixture(scope="module")
+def mlp_tg():
+    return build_training_graph(mlp_graph(4, widths=(16, 16)), "adam")
+
+
+@pytest.fixture(scope="module")
+def hda():
+    return edge_tpu()
+
+
+# ---------------------------------------------------------------------------
+# PopulationEvaluator vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+
+def test_score_keep_bit_for_bit(rn_tg, hda):
+    eng = get_engine(hda)
+    ev = PopulationEvaluator(rn_tg, hda, engine=eng)
+    acts = activation_set(rn_tg)
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        mask = rng.random(len(acts)) < rng.random()
+        got = ev.score_keep(mask)
+        keep = {a for i, a in enumerate(acts) if mask[i]}
+        s = evaluate_checkpointing(rn_tg, hda, keep, engine=eng)
+        assert got == (s.latency, s.energy, float(s.act_bytes))
+    assert ev.stats["soa"] > 0          # the SoA fast path actually ran
+
+
+def test_score_policy_bit_for_bit(rn_tg, hda):
+    eng = get_engine(hda)
+    ev = PopulationEvaluator(rn_tg, hda, engine=eng)
+    acts = activation_set(rn_tg)
+    rng = np.random.default_rng(4)
+    genomes = [rng.integers(0, 2, len(acts)) for _ in range(4)]
+    genomes += [rng.integers(0, 3, len(acts)) for _ in range(2)]  # + OFFLOAD
+    for genome in genomes:
+        got = ev.score_policy(genome)
+        pol = {acts[i]: ActivationPolicy(int(genome[i]))
+               for i in range(len(acts))}
+        s = evaluate_policy(rn_tg, hda, pol, engine=eng)
+        assert got == (s.latency, s.energy, float(s.peak_mem))
+
+
+def test_score_batch_equals_scalar_loop_elementwise(rn_tg, hda):
+    ev = PopulationEvaluator(rn_tg, hda, engine=get_engine(hda))
+    rng = np.random.default_rng(5)
+    pop = [rng.random(len(ev.acts)) < 0.5 for _ in range(6)]
+    assert ev.score_keep_batch(pop) == [ev.score_keep(m) for m in pop]
+
+
+def test_batch_dedup_signs_unique_phenotypes_once(rn_tg, hda):
+    eng = get_engine(hda)
+    ev = PopulationEvaluator(rn_tg, hda, engine=eng)
+    n = len(ev.acts)
+    rng = np.random.default_rng(6)
+    uniq = [rng.random(n) < 0.5 for _ in range(3)]
+    pop = uniq + [u.copy() for u in uniq] + [uniq[0].copy()]   # duplicates
+    ev.score_keep_batch(pop)
+    # each unique phenotype was evaluated exactly once...
+    assert ev.stats["soa"] + ev.stats["scalar"] <= len(uniq)
+    assert ev.stats["hits"] == len(pop) - len(uniq)
+    # ...and re-scoring the same population signs nothing fresh
+    s0 = sign_count()
+    hits0 = ev.stats["hits"]
+    out1 = ev.score_keep_batch(pop)
+    assert sign_count() == s0
+    assert ev.stats["hits"] == hits0 + len(pop)
+    assert out1 == ev.score_keep_batch(pop)
+
+
+def test_population_evaluator_memoized_on_engine(rn_tg, hda):
+    eng = get_engine(hda)
+    ev1 = eng.population_evaluator(rn_tg)
+    ev2 = eng.population_evaluator(rn_tg)
+    assert ev1 is ev2                   # fingerprint-keyed reuse
+    eng.clear()
+    assert eng.population_evaluator(rn_tg) is not ev1
+
+
+def test_sanitize_forces_scalar_and_disables_memo(rn_tg, hda, monkeypatch):
+    eng = get_engine(hda)
+    ev = PopulationEvaluator(rn_tg, hda, engine=eng)
+    acts = activation_set(rn_tg)
+    mask = np.zeros(len(acts), dtype=bool)
+    mask[::2] = True
+    clean = ev.score_keep(mask)
+
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    ev2 = PopulationEvaluator(rn_tg, hda, engine=eng)
+    a = ev2.score_keep(mask)
+    b = ev2.score_keep(mask)
+    assert a == b == clean              # C-rules hold: sanitizer is quiet
+    assert ev2.stats["soa"] == 0        # every evaluation went scalar...
+    assert ev2.stats["scalar"] == 2     # ...and none was served memoized
+    assert ev2.stats["hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# use_batch toggles on every population loop: identical search results
+# ---------------------------------------------------------------------------
+
+
+def _ac_front(res):
+    return [(s.latency, s.energy, s.act_bytes) for s in res.pareto]
+
+
+def test_ga_checkpointing_batched_equals_scalar(mlp_tg, hda):
+    kw = dict(pop_size=6, generations=3, seed=2)
+    rb = ga_checkpointing(mlp_tg, hda, use_batch=True, **kw)
+    rs = ga_checkpointing(mlp_tg, hda, use_batch=False, **kw)
+    assert _ac_front(rb) == _ac_front(rs)
+    np.testing.assert_array_equal(rb.ga.F, rs.ga.F)
+    np.testing.assert_array_equal(rb.ga.pareto_X, rs.ga.pareto_X)
+    assert rb.baseline.latency == rs.baseline.latency
+    assert rb.baseline.energy == rs.baseline.energy
+
+
+def test_ga_policy_batched_equals_scalar(mlp_tg, hda):
+    kw = dict(pop_size=6, generations=2, seed=2)
+    rb = ga_policy(mlp_tg, hda, use_batch=True, **kw)
+    rs = ga_policy(mlp_tg, hda, use_batch=False, **kw)
+    np.testing.assert_array_equal(rb.ga.F, rs.ga.F)
+    assert [(s.latency, s.energy, s.peak_mem) for s in rb.pareto] == \
+        [(s.latency, s.energy, s.peak_mem) for s in rs.pareto]
+    assert rb.baseline.peak_mem == rs.baseline.peak_mem
+
+
+def test_fusion_search_batched_equals_scalar(mlp_tg, hda):
+    kw = dict(pop_size=6, generations=3, seed=1)
+    rb = search_fusion(mlp_tg.graph, hda,
+                       FusionSearchConfig(use_batch=True, **kw))
+    rs = search_fusion(mlp_tg.graph, hda,
+                       FusionSearchConfig(use_batch=False, **kw))
+    assert rb.best.partition == rs.best.partition
+    assert rb.best.objectives == rs.best.objectives
+    assert [c.objectives for c in rb.pareto] == \
+        [c.objectives for c in rs.pareto]
+    # identical memo accounting: same genomes, same phenotype dedup
+    assert rb.stats["genome_evals"] == rs.stats["genome_evals"]
+    assert rb.stats["unique_partitions"] == rs.stats["unique_partitions"]
+    assert rb.stats["memo_hits"] == rs.stats["memo_hits"]
+
+
+def test_ga_parallel_batched_equals_scalar(mlp_tg):
+    kw = dict(chip_counts=[1, 2], pop_size=6, generations=2, seed=5)
+    rb, _ = ga_parallel(mlp_tg, edge_cluster, use_batch=True, **kw)
+    rs, _ = ga_parallel(mlp_tg, edge_cluster, use_batch=False, **kw)
+    np.testing.assert_array_equal(rb.pareto_X, rs.pareto_X)
+    np.testing.assert_array_equal(rb.pareto_F, rs.pareto_F)
+    np.testing.assert_array_equal(rb.F, rs.F)
+
+
+def test_dse_sweep_batched_equals_scalar(mlp_tg):
+    space = {"x_pes": [2, 4], "simd_units": [32, 64]}
+    workloads = {"train": mlp_tg.graph}
+    pb = sweep(edge_tpu, space, workloads, use_batch=True)
+    ps = sweep(edge_tpu, space, workloads, use_batch=False)
+    assert [p.config for p in pb] == [p.config for p in ps]
+    for a, b in zip(pb, ps, strict=True):
+        ra, rb_ = a.results["train"], b.results["train"]
+        assert (ra.latency, ra.energy, ra.peak_mem) == \
+            (rb_.latency, rb_.energy, rb_.peak_mem)
+        assert ra.mem_breakdown == rb_.mem_breakdown
+
+
+# ---------------------------------------------------------------------------
+# engine surface: score_batch (incl. fork-pool) parity
+# ---------------------------------------------------------------------------
+
+
+def test_engine_score_batch_matches_scalar_loop(mlp_tg, hda):
+    eng = get_engine(hda)
+    g = mlp_tg.graph
+    order = g.topo_order()
+    parts = [[(n,) for n in order],
+             [tuple(order[i:i + 2]) for i in range(0, len(order), 2)]]
+    jobs = [(g, None, p) for p in parts] + [(g, hda, parts[0])]  # + duplicate
+    got = eng.score_batch(jobs)
+    want = [schedule(g, hda, [list(sg) for sg in p], engine=eng)
+            for (_, _, p) in jobs]
+    for a, b in zip(got, want, strict=True):
+        assert (a.latency, a.energy, a.peak_mem, a.offchip_bytes) == \
+            (b.latency, b.energy, b.peak_mem, b.offchip_bytes)
+
+
+def test_schedule_batch_fork_pool_parity(mlp_tg, hda):
+    from repro.core.scheduling import schedule_batch
+    g = mlp_tg.graph
+    part = [(n,) for n in g.topo_order()]
+    jobs = [(g, hda, part), (g, edge_tpu(x_pes=2), part)]
+    serial = schedule_batch(jobs)
+    forked = schedule_batch(jobs, processes=2)
+    for a, b in zip(serial, forked, strict=True):
+        assert (a.latency, a.energy, a.peak_mem) == \
+            (b.latency, b.energy, b.peak_mem)
+        assert a.per_core_busy == b.per_core_busy
+
+
+# ---------------------------------------------------------------------------
+# C-rule cleanliness: the batched GA under the sanitizer
+# ---------------------------------------------------------------------------
+
+
+def test_ga_checkpointing_batched_clean_under_sanitizer(mlp_tg, hda,
+                                                        monkeypatch):
+    kw = dict(pop_size=4, generations=2, seed=0)
+    clean = ga_checkpointing(mlp_tg, hda, use_batch=True, **kw)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    # shadow verification raises on any C-rule violation; completing with
+    # the same front certifies the batched path's cache coherence
+    shadow = ga_checkpointing(mlp_tg, hda, use_batch=True, **kw)
+    assert _ac_front(shadow) == _ac_front(clean)

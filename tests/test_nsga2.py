@@ -157,3 +157,29 @@ def test_ga_parallel_resume_passthrough(tiny_tg, tmp_path):
     resumed, _ = ga_parallel(tiny_tg, edge_cluster, resume=path, **kw)
     np.testing.assert_array_equal(resumed.pareto_F, full.pareto_F)
     np.testing.assert_array_equal(resumed.X, full.X)
+
+
+def test_ga_policy_resume_across_batched_boundary(tiny_tg, tmp_path):
+    """Snapshot at a generation boundary inside a *batched* run, then resume
+    with ``use_batch`` toggled (both directions): the final fronts must be
+    bit-for-bit identical to the uninterrupted run.  The batched evaluator
+    consumes no RNG and returns scalar-identical objectives, so flipping it
+    mid-search is invisible to the trajectory."""
+    hda = edge_tpu()
+    kw = dict(pop_size=6, generations=4, seed=7)
+    full = ga_policy(tiny_tg, hda, use_batch=True, **kw)
+    full_scalar = ga_policy(tiny_tg, hda, use_batch=False, **kw)
+    np.testing.assert_array_equal(full.ga.pareto_F, full_scalar.ga.pareto_F)
+
+    for crash_batch, resume_batch in [(True, False), (False, True)]:
+        path = str(tmp_path / f"pol_{crash_batch}.json")
+        ga_policy(tiny_tg, hda, snapshot_every=2, snapshot_path=path,
+                  use_batch=crash_batch, **{**kw, "generations": 2})
+        assert load_snapshot(path)["generation"] == 2
+        resumed = ga_policy(tiny_tg, hda, resume=path,
+                            use_batch=resume_batch, **kw)
+        np.testing.assert_array_equal(resumed.ga.X, full.ga.X)
+        np.testing.assert_array_equal(resumed.ga.F, full.ga.F)
+        np.testing.assert_array_equal(resumed.ga.pareto_F, full.ga.pareto_F)
+        assert [(s.latency, s.energy, s.peak_mem) for s in resumed.pareto] \
+            == [(s.latency, s.energy, s.peak_mem) for s in full.pareto]

@@ -243,3 +243,22 @@ def test_prune_pspec_divisibility(dims):
         for a in axes:
             prod *= int(mesh.shape[a])
         assert d % prod == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(widths=widths_st, batch=st.sampled_from([1, 4]),
+       pop_seed=st.integers(0, 2**31 - 1))
+def test_batched_population_scoring_exact(widths, batch, pop_seed):
+    """score_keep_batch == elementwise score_keep, bit-for-bit, and the
+    batch dedup never evaluates more than the unique phenotypes."""
+    from repro.core import edge_tpu
+    from repro.core.batch import PopulationEvaluator
+
+    tg = build_training_graph(random_mlp(widths, batch))
+    ev = PopulationEvaluator(tg, edge_tpu())
+    rng = np.random.default_rng(pop_seed)
+    pop = [rng.random(len(ev.acts)) < rng.random() for _ in range(10)]
+    batched = ev.score_keep_batch(pop)
+    assert batched == [ev.score_keep(m) for m in pop]
+    uniq = len({m.tobytes() for m in pop})
+    assert ev.stats["soa"] + ev.stats["scalar"] <= uniq
