@@ -57,14 +57,41 @@ def run(image: int = 64):
          f"warm/ref={us_warm / reps / max(us_ref, 1e-9):.3f}")
 
 
+def _fallback_notes(ev) -> str:
+    """Per-reason scalar-fallback counters + the share of genuinely
+    fast-path-eligible work that fell back, for the derived column (the
+    regression guard parses ``share=``)."""
+    s = ev.stats
+    return (f"share={ev.scalar_share():.3f};offl={s['scalar_offload']};"
+            f"cyc={s['scalar_cyclic']};fus={s['scalar_fusion']};"
+            f"rc={s['scalar_rc']};san={s['scalar_sanitize']}")
+
+
+def _warn_if_scalar_heavy(name: str, ev, limit: float = 0.10) -> None:
+    import sys
+
+    share = ev.scalar_share()
+    if share > limit:
+        print(f"# WARNING {name}: {share:.1%} of phenotype evaluations ran "
+              f"on the scalar oracle (>{limit:.0%}) — the SoA fast path is "
+              f"silently degraded", file=sys.stderr)
+
+
 def run_batch(image: int = 64):
     """Batched population evaluation (src/repro/core/batch.py):
 
-    * ``engine_batch_warm``   — per-genome cost of scoring a 32-keep-mask
+    * ``engine_batch_warm``    — per-genome cost of scoring a 32-keep-mask
       population through the engine-cached ``PopulationEvaluator``, after
       one warming pass (phenotype dedup + SoA fast path);
-    * ``ga_policy_batched``   — full ``ga_policy`` search with the batched
+    * ``engine_batch_offload`` — per-genome cost of a 32-strong *ternary*
+      population (KEEP/RECOMPUTE/OFFLOAD): exercises the DMA-splicing SoA
+      lowering and the cross-phenotype batched costing pass;
+    * ``ga_policy_batched``    — full ``ga_policy`` search with the batched
       evaluator (min-of-2: the repeat hits the evaluator memo).
+
+    Each entry's derived column carries the per-reason scalar-fallback
+    counters and the fallback share; a hot entry silently running >10%
+    scalar prints a warning to stderr.
     """
     import numpy as np
 
@@ -82,11 +109,25 @@ def run_batch(image: int = 64):
     _, us_pop = timed(ev.score_keep_batch, fresh)
     emit("engine_batch_warm", us_pop / len(fresh),
          f"pop={len(fresh)};soa={ev.stats['soa']};"
-         f"scalar={ev.stats['scalar']};hits={ev.stats['hits']}")
+         f"scalar={ev.stats['scalar']};hits={ev.stats['hits']};"
+         f"{_fallback_notes(ev)}")
+    _warn_if_scalar_heavy("engine_batch_warm", ev)
+
+    genomes = [rng.integers(0, 3, len(ev.acts)) for _ in range(32)]
+    ev.score_policy_batch(genomes)                 # warm phenotype cache
+    fresh_g = [rng.integers(0, 3, len(ev.acts)) for _ in range(32)]
+    _, us_off = timed(ev.score_policy_batch, fresh_g)
+    emit("engine_batch_offload", us_off / len(fresh_g),
+         f"pop={len(fresh_g)};soa={ev.stats['soa']};"
+         f"scalar={ev.stats['scalar']};hits={ev.stats['hits']};"
+         f"{_fallback_notes(ev)}")
+    _warn_if_scalar_heavy("engine_batch_offload", ev)
 
     _, us_ga = timed_min(ga_policy, tg, hda, 8, 3, 0, repeats=2)
     emit("ga_policy_batched", us_ga,
-         f"pop=8;gens=3;evaluator_hits={ev.stats['hits']}")
+         f"pop=8;gens=3;evaluator_hits={ev.stats['hits']};"
+         f"{_fallback_notes(ev)}")
+    _warn_if_scalar_heavy("ga_policy_batched", ev)
 
 
 def main():

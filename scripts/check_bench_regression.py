@@ -28,6 +28,7 @@ import argparse
 import json
 import math
 import os
+import re
 import subprocess
 import sys
 
@@ -37,6 +38,7 @@ HOT_PATHS = {
     "engine_cold": "engine",
     "engine_delta": "engine",
     "engine_batch_warm": "engine_batch",
+    "engine_batch_offload": "engine_batch",
     "ga_policy_batched": "engine_batch",
     "memory_lifetime_plan": "memory",
     "memory_policy_eval": "memory",
@@ -47,6 +49,14 @@ HOT_PATHS = {
     "resilience_goodput": "resilience",
     "resilience_degrade": "resilience",
 }
+
+#: batched-evaluator entries whose derived column carries a ``share=``
+#: scalar-fallback ratio (benchmarks/bench_engine.py).  The SoA fast path
+#: degrading silently — genomes quietly re-routed to the scalar oracle —
+#: does not move wall-clock enough on a 32-pop bench to trip the timing
+#: guard, so the share itself is guarded against an absolute ceiling.
+SCALAR_SHARE_GUARDS = ("engine_batch_warm", "engine_batch_offload",
+                       "ga_policy_batched")
 
 
 def load(path: str) -> dict:
@@ -77,6 +87,22 @@ def us_of(record: dict, name: str) -> tuple[float | None, str | None]:
     return v, None
 
 
+def share_of(record: dict, name: str) -> float | None:
+    """Scalar-fallback share parsed from an entry's derived column, or
+    ``None`` when the entry predates fallback observability."""
+    entry = record.get(name)
+    if not isinstance(entry, dict):
+        return None
+    m = re.search(r"(?:^|;)share=([0-9.]+)", str(entry.get("derived", "")))
+    if not m:
+        return None
+    try:
+        v = float(m.group(1))
+    except ValueError:
+        return None
+    return v if 0.0 <= v <= 1.0 else None
+
+
 def rerun(target: str) -> None:
     """Refresh one benchmark's entry (merge semantics of --json keep the
     rest of BENCH_eval.json intact)."""
@@ -99,6 +125,11 @@ def main() -> int:
     ap.add_argument("--floor-us", type=float,
                     default=float(os.environ.get("BENCH_GUARD_FLOOR_US",
                                                  "1000")))
+    ap.add_argument("--max-scalar-share", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_GUARD_MAX_SCALAR_SHARE", "0.10")),
+                    help="ceiling on the batched-evaluator scalar-fallback "
+                         "share (SoA fast-path hit-ratio guard)")
     ap.add_argument("--no-rerun", action="store_true",
                     help="skip the confirmation re-run of violations")
     ap.add_argument("--summary-json",
@@ -116,9 +147,14 @@ def main() -> int:
         summary["exit_code"] = code
         print(message)
         for f in summary["failures"]:
-            print(f"  - {f['name']}: {f['baseline_us']:.0f}us -> "
-                  f"{f['current_us']:.0f}us (x{f['ratio']:.2f} > "
-                  f"x{args.max_ratio:.2f})")
+            if "ratio" in f:
+                print(f"  - {f['name']}: {f['baseline_us']:.0f}us -> "
+                      f"{f['current_us']:.0f}us (x{f['ratio']:.2f} > "
+                      f"x{args.max_ratio:.2f})")
+            else:
+                print(f"  - {f['name']}: scalar-fallback share "
+                      f"{f['current_share']:.3f} > ceiling "
+                      f"{f['ceiling']:.2f} (SoA fast path degraded)")
         if args.summary_json:
             os.makedirs(os.path.dirname(args.summary_json) or ".",
                         exist_ok=True)
@@ -169,6 +205,19 @@ def main() -> int:
         if c > b * args.max_ratio:
             summary["failures"].append(entry)
 
+    for name in SCALAR_SHARE_GUARDS:
+        s = share_of(current, name)
+        if s is None:
+            summary["skipped"].append(dict(name=f"{name}:scalar_share",
+                                           reason="current_no_share"))
+            continue
+        entry = dict(name=f"{name}:scalar_share", current_share=s,
+                     baseline_share=share_of(base, name),
+                     ceiling=args.max_scalar_share)
+        summary["checked"].append(entry)
+        if s > args.max_scalar_share:
+            summary["failures"].append(entry)
+
     if summary["failures"]:
         return finish("failed", 1,
                       "bench guard FAILED (hot-path regression >"
@@ -182,9 +231,10 @@ def main() -> int:
                       f"(missing/NaN/sub-floor) [exit 0]")
     return finish("ok", 0,
                   f"bench guard OK ({len(summary['checked'])} of "
-                  f"{len(HOT_PATHS)} hot-path entries compared, "
-                  f"{len(summary['skipped'])} skipped, "
-                  f"threshold x{args.max_ratio:.2f})")
+                  f"{len(HOT_PATHS) + len(SCALAR_SHARE_GUARDS)} guarded "
+                  f"entries compared, {len(summary['skipped'])} skipped, "
+                  f"threshold x{args.max_ratio:.2f}, scalar-share ceiling "
+                  f"{args.max_scalar_share:.2f})")
 
 
 if __name__ == "__main__":

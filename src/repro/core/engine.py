@@ -626,6 +626,82 @@ class BoundEngine:
         eng._sg[key] = res
         return res
 
+    def subgraph_cost_many(self, groups) -> list:
+        """Batched :meth:`subgraph_cost` — bit-for-bit equal to
+        ``[self.subgraph_cost(sg) for sg in groups]``.  One pass over the
+        SoA signature tables probes the subgraph cache for every singleton
+        group up front (the overwhelmingly common case in a population
+        batch); only the remaining groups go through the scalar kernel.
+        Because keys are content signatures, duplicates across the batch —
+        and across phenotypes in the batched population evaluator — are
+        computed exactly once."""
+        eng = self.engine
+        sg_cache = eng._sg
+        zmask = self.sigs.zmask
+        hits = 0
+        out: list = [None] * len(groups)
+        misses: list = []
+        for i, sg in enumerate(groups):
+            if len(sg) == 1:
+                cached = sg_cache.get(((zmask[sg[0]],), 0.0, 0))
+                if cached is not None:
+                    hits += 1
+                    out[i] = cached
+                    continue
+            misses.append(i)
+        eng.stats["sg_hits"] += hits
+        for i in misses:
+            out[i] = self.subgraph_cost(groups[i])
+        return out
+
+
+def dma_group_cost(engine: EvalEngine, op: str, size: int,
+                   ebytes: int) -> NodeCost:
+    """Fused-group cost of one spliced DMA transfer node (``op`` is
+    ``"offload"`` or ``"fetch"``) for a payload of ``size`` elements ×
+    ``ebytes`` bytes/element — bit-identical to ``_sign_node`` +
+    ``BoundEngine.subgraph_cost`` on the node's singleton group (same
+    signature tuple, same interned ids, same shared ``_CYC`` /
+    ``_NODE_COSTS`` / ``_sg`` entries), without materializing the spliced
+    graph.  This is how the batched evaluator's OFFLOAD lowering
+    (``repro.core.batch``) keeps the engine caches coherent with the scalar
+    oracle: an ``apply_offload`` rewrite evaluated later hits these exact
+    entries and signs nothing fresh."""
+    payload = size * ebytes         # == TensorSpec.bytes of the activation
+    if op == "offload":             # activation in, 1-byte marker out
+        in_b, out_b, eb, inb, outb = (payload,), (1,), 1, payload, 1
+    else:                           # marker in, re-materialized tensor out
+        in_b, out_b, eb, inb, outb = (1,), (payload,), ebytes, 1, payload
+    dims = {"N": size, "E": ebytes}
+    sig = (op, tuple(sorted(dims.items())), 0, in_b, (0,), out_b, eb)
+    sid = _sig_id(sig)
+    tri = (sid, (False,), (False,))
+    key = ((tri,), 0.0, 0)
+    cached = engine._sg.get(key)
+    if cached is not None:
+        engine.stats["sg_hits"] += 1
+        return cached
+    engine.stats["sg_misses"] += 1
+    ck = engine._ck_dma
+    cyc = _CYC.get((ck, sid))
+    if cyc is None:
+        nd = Node(f"{op}:<soa>", op, "dma", dims, [], [], 0, None)
+        cyc = compute_cycles(nd, engine.core_for_class("dma"), 1, engine.hda)
+        _CYC[(ck, sid)] = cyc
+    nkey = (ck, sid, (False,), (False,))
+    c = _NODE_COSTS.get(nkey)
+    if c is not None:
+        engine.stats["node_hits"] += 1
+    else:
+        engine.stats["node_misses"] += 1
+        c = dma_node_cost(cyc, inb, outb, engine.hda)
+        _NODE_COSTS[nkey] = c
+    res = subgraph_tail({"dma": cyc}, c.offchip_bytes, c.local_bytes, 0.0,
+                        c.energy_pj, 0, engine._compute, engine._simd,
+                        engine.hda)
+    engine._sg[key] = res
+    return res
+
 
 # ---------------------------------------------------------------------------
 # engine registry

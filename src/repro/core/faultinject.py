@@ -31,9 +31,9 @@ from .checkpointing import apply_policy
 from .engine import Fingerprint, graph_sigs
 from .memory import ActivationPolicy
 from .scheduling import schedule
-from .training_transform import build_training_graph
+from .training_transform import _build_training_graph
 from .verify import ERROR, verify_cache, verify_graph, verify_schedule
-from .zoo import mlp_graph
+from .zoo import _build_mlp
 
 
 @dataclass(frozen=True)
@@ -64,8 +64,13 @@ class _Context:
     all exist as corruption material."""
 
     def __init__(self):
-        tg = build_training_graph(mlp_graph(batch=4, widths=(16, 16, 16)),
-                                  "adam")
+        # build through the private constructors, NOT the memoized public
+        # entry points: injections mutate the graph in place *bypassing the
+        # mutation API*, and `graph.copy()`'s copy-on-write consumer lists
+        # would leak that corruption back into the construction-memo
+        # masters every later caller receives
+        fwd = _build_mlp(4, 64, (16, 16, 16), 10, True)
+        tg = _build_training_graph(fwd, "adam", True, "float32", "bfloat16")
         policy = {}
         acts = list(tg.activations)
         if acts:

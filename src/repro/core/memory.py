@@ -215,6 +215,28 @@ class MemProfile:
     act_peak: int = 0             # peak live activation-category bytes
 
 
+def _fetch_start_override(plan: LifetimePlan, perm_cons: np.ndarray,
+                          s_arr: np.ndarray, batched: bool) -> np.ndarray:
+    """DMA residency window of fetched activations (shared by the scalar and
+    batched profile kernels).  The greedy list scheduler back-fills the idle
+    ``dma`` resource, starting fetch transfers as early as possible — but a
+    real DMA engine times the transfer so the destination buffer lands right
+    before its first consumer (double-buffered prefetch).  A fetched tensor
+    is therefore resident from its *first consumer's* step, not from the
+    transfer's finish step; its source payload lives off-chip between the
+    ``offload`` and the ``fetch`` and never re-enters the on-chip arrays."""
+    if plan.fetch_idx is None or not plan.fetch_idx.size:
+        return s_arr
+    s_arr = s_arr.copy()
+    if batched:
+        first_use = np.minimum.reduceat(perm_cons, plan.cons_split, axis=1)
+        s_arr[:, plan.fetch_idx] = first_use[:, plan.fetch_idx]
+    else:
+        first_use = np.minimum.reduceat(perm_cons, plan.cons_split)
+        s_arr[plan.fetch_idx] = first_use[plan.fetch_idx]
+    return s_arr
+
+
 def lifetime_profile(plan: LifetimePlan, perm: np.ndarray) -> MemProfile:
     """Exact interval peak + per-category breakdown for one finish-order
     permutation (``perm[subgraph] = step``).  Integer byte arithmetic: on a
@@ -225,20 +247,12 @@ def lifetime_profile(plan: LifetimePlan, perm: np.ndarray) -> MemProfile:
     if plan.prod_sg.size == 0:
         bd = {c: static_bd.get(c, 0) for c in MEM_CATEGORIES}
         return MemProfile(plan.static, bd, 0)
+    perm_cons = perm[plan.cons_flat]
     s_arr = perm[plan.prod_sg]
     # last consumer in finish order (last-assignment-wins over the scan)
-    e_arr = np.maximum.reduceat(perm[plan.cons_flat], plan.cons_split)
-    if plan.fetch_idx is not None and plan.fetch_idx.size:
-        # just-in-time arrival: the greedy list scheduler back-fills the
-        # idle dma resource, starting fetch transfers as early as possible —
-        # but a real DMA engine times the transfer so the destination buffer
-        # lands right before its first consumer (double-buffered prefetch).
-        # The fetched tensor is therefore resident from its first consumer's
-        # step, not from the transfer's finish step.
-        first_use = np.minimum.reduceat(perm[plan.cons_flat],
-                                        plan.cons_split)
-        s_arr = s_arr.copy()
-        s_arr[plan.fetch_idx] = first_use[plan.fetch_idx]
+    e_arr = np.maximum.reduceat(perm_cons, plan.cons_split)
+    # just-in-time DMA arrival (no-op without fetched tensors)
+    s_arr = _fetch_start_override(plan, perm_cons, s_arr, batched=False)
     deltas = np.zeros((plan.n_steps + 1, ncat), dtype=np.int64)
     np.add.at(deltas, (s_arr, plan.cats), plan.nbytes)
     np.add.at(deltas, (e_arr + 1, plan.cats), -plan.nbytes)
@@ -276,10 +290,7 @@ def lifetime_profile_batch(plan: LifetimePlan, perms: list) -> list:
     s_arr = P[:, plan.prod_sg]                # (B, n_tensors)
     cf = P[:, plan.cons_flat]
     e_arr = np.maximum.reduceat(cf, plan.cons_split, axis=1)
-    if plan.fetch_idx is not None and plan.fetch_idx.size:
-        first_use = np.minimum.reduceat(cf, plan.cons_split, axis=1)
-        s_arr = s_arr.copy()
-        s_arr[:, plan.fetch_idx] = first_use[:, plan.fetch_idx]
+    s_arr = _fetch_start_override(plan, cf, s_arr, batched=True)
     rows = np.arange(nb)[:, None]
     cats = plan.cats[None, :]
     deltas = np.zeros((nb, plan.n_steps + 1, ncat), dtype=np.int64)

@@ -33,6 +33,7 @@ device); global batch = local_batch × data × microbatches.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from .accelerators import ClusterSpec
@@ -441,13 +442,41 @@ class ParallelPlan:
                 f"cluster={self.cluster.name})")
 
 
-def parallelize(tg: TrainingGraph, strategy: ParallelStrategy,
-                cluster: ClusterSpec) -> ParallelPlan:
-    """Rewrite ``tg`` (built at the per-chip local batch) into per-stage,
-    per-chip graphs with collective nodes for ``strategy`` on ``cluster``."""
-    if strategy.chips != cluster.n_chips:
-        raise ValueError(f"strategy needs {strategy.chips} chips, cluster "
-                         f"has {cluster.n_chips}")
+class _CachedRewrite:
+    """One memoized collective-injection rewrite: the per-stage graph
+    skeletons plus every derived artifact that is a pure function of the
+    rewritten content — per-microbatch bodies, per-topology wire bytes,
+    manual-fusion partitions and degrade-coherence findings.  Consumers
+    treat the stage graphs as **immutable**; mutating one would poison the
+    cache (docs/parallelism.md, rewrite-cache invalidation rules)."""
+
+    __slots__ = ("stages", "sharded", "bodies", "wires", "parts",
+                 "degrade_findings")
+
+    def __init__(self, stages: list, sharded: list):
+        self.stages = stages
+        self.sharded = sharded
+        self.bodies: list | None = None   # per stage: body graph | False
+        self.wires: dict = {}             # ici_topology -> {(si, body): B}
+        self.parts: dict = {}             # (si, body) -> (part, quotient)
+        self.degrade_findings: dict = {}  # survivors -> verify_degrade list
+
+
+#: strategy-keyed rewrite cache: (graph fingerprint, signature generation,
+#: strategy, param-grad map) -> _CachedRewrite.  The fingerprint is derived
+#: from the interned signature tables, so mutating the training graph (its
+#: ``_version`` bumps) or clearing the intern table (``_SIG_GEN`` bumps)
+#: naturally invalidates without any explicit hook; the cluster is *not*
+#: part of the key because the rewrite itself is cluster-independent (the
+#: chips==n_chips check runs before the copy, and chip parameters only
+#: enter at scheduling time).
+_REWRITES: OrderedDict = OrderedDict()
+_REWRITES_CAP = 64
+rewrite_cache_stats = dict(hits=0, misses=0)
+
+
+def _run_rewrites(tg: TrainingGraph,
+                  strategy: ParallelStrategy) -> _CachedRewrite:
     g = tg.graph.copy()
     sharded = _apply_tensor_parallel(g, strategy.tensor)
     if strategy.zero:
@@ -455,7 +484,47 @@ def parallelize(tg: TrainingGraph, strategy: ParallelStrategy,
     else:
         _apply_data_parallel(g, tg.param_grads, strategy.data)
     stages = _split_stages(g, strategy.pipeline)
-    return ParallelPlan(strategy, cluster, stages, sharded)
+    return _CachedRewrite(stages, sharded)
+
+
+def _rewrite(tg: TrainingGraph, strategy: ParallelStrategy) -> _CachedRewrite:
+    """The memoized rewrite.  Under ``REPRO_SANITIZE`` the cache is bypassed
+    in both directions (never served, never populated) so the sanitizer's
+    shadow verification always sees a freshly constructed rewrite."""
+    from .verify import sanitize_enabled
+    if sanitize_enabled():
+        return _run_rewrites(tg, strategy)
+    from . import engine as _engine_mod
+    from .engine import _fingerprint, graph_sigs
+    fp = _fingerprint(tg.graph, graph_sigs(tg.graph))
+    key = (fp, _engine_mod._SIG_GEN, strategy,
+           tuple(sorted(tg.param_grads.items())))
+    ent = _REWRITES.get(key)
+    if ent is not None:
+        _REWRITES.move_to_end(key)
+        rewrite_cache_stats["hits"] += 1
+        return ent
+    rewrite_cache_stats["misses"] += 1
+    ent = _run_rewrites(tg, strategy)
+    _REWRITES[key] = ent
+    while len(_REWRITES) > _REWRITES_CAP:
+        _REWRITES.popitem(last=False)
+    return ent
+
+
+def parallelize(tg: TrainingGraph, strategy: ParallelStrategy,
+                cluster: ClusterSpec) -> ParallelPlan:
+    """Rewrite ``tg`` (built at the per-chip local batch) into per-stage,
+    per-chip graphs with collective nodes for ``strategy`` on ``cluster``.
+    The rewrite is served from the strategy-keyed cache when warm, so the
+    returned plan shares its stage graphs with every other plan of the same
+    (graph, strategy) — they carry warm signature tables and must be
+    treated as read-only."""
+    if strategy.chips != cluster.n_chips:
+        raise ValueError(f"strategy needs {strategy.chips} chips, cluster "
+                         f"has {cluster.n_chips}")
+    ent = _rewrite(tg, strategy)
+    return ParallelPlan(strategy, cluster, ent.stages, list(ent.sharded))
 
 
 #: outputs of the once-per-iteration gradient-sync collectives (plain DP
@@ -575,33 +644,58 @@ def evaluate_parallel(tg: TrainingGraph, cluster: ClusterSpec,
 
     ``use_engine=False`` forces the uncached reference cost path — the
     parity tests require bit-for-bit agreement with the default."""
-    plan = parallelize(tg, strategy, cluster)
+    if strategy.chips != cluster.n_chips:
+        raise ValueError(f"strategy needs {strategy.chips} chips, cluster "
+                         f"has {cluster.n_chips}")
+    ent = _rewrite(tg, strategy)
+    plan = ParallelPlan(strategy, cluster, ent.stages, list(ent.sharded))
     chip = cluster.chip
     m = strategy.microbatches
     pp = strategy.pipeline
+    # manual-fusion partitions depend only on graph structure (never on the
+    # chip or the engine), so they live on the cached rewrite; other fusion
+    # modes are chip-aware and recompute per call
+    cache_parts = fusion == "manual" and fusion_cfg is None
+    wires = ent.wires.setdefault(chip.ici_topology, {})
 
-    def run(sg):
+    def run(sg, pkey):
         # shared fusion-mode dispatcher; fusion="search" gives every
         # pipeline stage its own boundary-genome search, with comm
         # send/recv nodes pinned to singleton 'ici' groups
         from .fusion_search import fusion_partition
-        part, quotient = fusion_partition(sg, chip, fusion, fusion_cfg,
-                                          engine)
+        pq = ent.parts.get(pkey) if cache_parts else None
+        if pq is None:
+            pq = fusion_partition(sg, chip, fusion, fusion_cfg, engine)
+            if cache_parts:
+                ent.parts[pkey] = pq
+        part, quotient = pq
         return schedule(sg, chip, part, engine=engine,
                         use_engine=use_engine, quotient=quotient)
 
+    def wire_of(sg, wkey):
+        w = wires.get(wkey)
+        if w is None:
+            w = wires[wkey] = graph_wire_bytes(sg, chip.ici_topology)
+        return w
+
+    if ent.bodies is None:
+        ent.bodies = [None] * len(ent.stages)
     results: list[ScheduleResult] = []      # full stage graphs
     bodies: list[ScheduleResult] = []       # per-microbatch bodies
     wire_full: list[float] = []
     wire_body: list[float] = []
-    for sg in plan.stage_graphs:
-        r_full = run(sg)
-        wf = graph_wire_bytes(sg, chip.ici_topology)
+    for si, sg in enumerate(plan.stage_graphs):
+        r_full = run(sg, (si, False))
+        wf = wire_of(sg, (si, False))
         if m > 1:
-            bg = _strip_iteration_tail(sg)
-            r_body = run(bg) if bg is not None else r_full
-            wb = graph_wire_bytes(bg, chip.ici_topology) \
-                if bg is not None else wf
+            bg = ent.bodies[si]
+            if bg is None:
+                bg = _strip_iteration_tail(sg)
+                ent.bodies[si] = bg if bg is not None else False
+            elif bg is False:
+                bg = None               # memoized "no iteration tail"
+            r_body = run(bg, (si, True)) if bg is not None else r_full
+            wb = wire_of(bg, (si, True)) if bg is not None else wf
         else:
             r_body, wb = r_full, wf
         results.append(r_full)
@@ -777,3 +871,23 @@ def nearest_strategy(strategy: ParallelStrategy, n_chips: int,
         best = ParallelStrategy(best.data, best.tensor, best.pipeline,
                                 best.microbatches, zero=True)
     return best
+
+
+def degrade_findings(tg: TrainingGraph, plan: ParallelPlan,
+                     survivors: int) -> list:
+    """C009 degrade-coherence findings for a survivor plan, memoized on the
+    cached rewrite: ``verify_degrade`` re-signs every stage from scratch to
+    cross-check the warm signature tables, so repeating it per degrade call
+    on an unchanged rewrite would re-pay the one cost the cache removed.
+    The memo key is the survivor count — the stage graphs themselves are
+    the (immutable) cache entry.  Under ``REPRO_SANITIZE`` the rewrite is
+    never cached, so the verifier always runs fresh."""
+    from .verify import sanitize_enabled, verify_degrade
+    if sanitize_enabled():
+        return verify_degrade(tg, plan, survivors)
+    ent = _rewrite(tg, plan.strategy)
+    hit = ent.degrade_findings.get(survivors)
+    if hit is None:
+        hit = ent.degrade_findings[survivors] = \
+            verify_degrade(tg, plan, survivors)
+    return list(hit)

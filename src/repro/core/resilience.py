@@ -265,12 +265,14 @@ def degrade(tg, cluster: ClusterSpec, strategy: ParallelStrategy,
     new_strategy = nearest_strategy(strategy, survivors)
     result = evaluate_parallel(tg, new_cluster, new_strategy, fusion=fusion,
                                engine=engine)
-    from .parallel import parallelize
+    from .parallel import degrade_findings, parallelize
     plan = parallelize(tg, new_strategy, new_cluster)
     findings = []
     if verify:
-        from .verify import verify_degrade
-        findings = verify_degrade(tg, plan, survivors)
+        # memoized on the cached rewrite: verify_degrade re-signs every
+        # stage, so a warm degrade call must not re-pay it (C009 parity —
+        # tests assert zero fresh signings on the cached path)
+        findings = degrade_findings(tg, plan, survivors)
     return DegradeResult(cluster=new_cluster, strategy=new_strategy,
                          plan=plan, result=result,
                          failed_chips=failed_chips, findings=findings)

@@ -146,6 +146,22 @@ class _Plan:
             has_fetch=bool(self.mem.fetch_idx.size))
 
 
+class MiniPlan:
+    """Duck-typed stand-in for :class:`_Plan` carrying exactly what
+    ``_list_schedule`` consumes (``n`` / ``succ`` / ``prio`` / ``indeg``).
+    The batched phenotype evaluator (``repro.core.batch``) builds these
+    directly from its integer array view instead of materializing a graph
+    and a full plan per phenotype."""
+
+    __slots__ = ("n", "succ", "prio", "indeg")
+
+    def __init__(self, n, succ, prio, indeg):
+        self.n = n
+        self.succ = succ
+        self.prio = prio
+        self.indeg = indeg
+
+
 _PLANS: OrderedDict = OrderedDict()
 _PLAN_CAP = 128
 _PLAN_STATS = {"hits": 0, "misses": 0}

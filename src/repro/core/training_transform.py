@@ -120,6 +120,17 @@ def _is_differentiable(spec: TensorSpec) -> bool:
     return not spec.is_input and not spec.dtype.startswith(("int", "uint", "bool"))
 
 
+#: fingerprint-keyed training-transform memo.  The autodiff sweep is a pure
+#: function of the forward graph's *content* (structure + tensor role
+#: flags) and the transform kwargs, so one master TrainingGraph per key is
+#: built and each call returns a deep-copy-on-return bundle (fresh graph
+#: copy, fresh maps) — callers rewrite the result freely.  The signature
+#: fingerprint does not cover is_param/is_state/is_input, so those are
+#: digested into the key explicitly.
+_TRAIN_MEMO: dict = {}
+_TRAIN_MEMO_CAP = 32
+
+
 def build_training_graph(fwd: WorkloadGraph, optimizer: str = "adam",
                          include_optimizer: bool = True,
                          state_dtype: str = "float32",
@@ -127,6 +138,28 @@ def build_training_graph(fwd: WorkloadGraph, optimizer: str = "adam",
     if optimizer not in OPTIMIZERS:
         raise ValueError(f"unknown optimizer {optimizer!r}; "
                          f"choose from {sorted(OPTIMIZERS)}")
+    from .engine import _SIG_GEN, _fingerprint, graph_sigs
+    flags = tuple((t, s.is_param, s.is_state, s.is_input)
+                  for t, s in fwd.tensors.items())
+    key = (_fingerprint(fwd, graph_sigs(fwd)), _SIG_GEN, flags, optimizer,
+           include_optimizer, state_dtype, grad_dtype)
+    master = _TRAIN_MEMO.get(key)
+    if master is not None:
+        return TrainingGraph(master.graph.copy(), dict(master.param_grads),
+                             list(master.activations), master.optimizer)
+    out = _build_training_graph(fwd, optimizer, include_optimizer,
+                                state_dtype, grad_dtype)
+    if len(_TRAIN_MEMO) >= _TRAIN_MEMO_CAP:
+        _TRAIN_MEMO.clear()
+    _TRAIN_MEMO[key] = TrainingGraph(out.graph.copy(),
+                                     dict(out.param_grads),
+                                     list(out.activations), out.optimizer)
+    return out
+
+
+def _build_training_graph(fwd: WorkloadGraph, optimizer: str,
+                          include_optimizer: bool, state_dtype: str,
+                          grad_dtype: str) -> TrainingGraph:
     g = fwd.copy()
     g.name = f"{fwd.name}.train"
     ad = _Autodiff(g, grad_dtype)

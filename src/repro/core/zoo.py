@@ -10,6 +10,25 @@ from __future__ import annotations
 from .builders import GraphBuilder
 from .graph import WorkloadGraph
 
+#: arg-keyed master graphs: the zoo builders are pure functions of their
+#: arguments, so each configuration is constructed (and validated, and
+#: signed) once; every call returns a fresh ``.copy()`` of the master so
+#: callers can rewrite/retune freely without poisoning the memo.  The copy
+#: inherits the master's signature tables and adjacency, which is what
+#: makes repeat construction (dozens of tests/benches build the same GPT-2)
+#: a warm-path operation.
+_GRAPH_MEMO: dict = {}
+_GRAPH_MEMO_CAP = 64
+
+
+def _memoized(key: tuple, build) -> WorkloadGraph:
+    master = _GRAPH_MEMO.get(key)
+    if master is None:
+        if len(_GRAPH_MEMO) >= _GRAPH_MEMO_CAP:
+            _GRAPH_MEMO.clear()
+        master = _GRAPH_MEMO[key] = build()
+    return master.copy()
+
 
 def resnet18_graph(batch: int = 1, image: int = 32, num_classes: int = 10,
                    with_loss: bool = True, dtype: str = "bfloat16"
@@ -17,6 +36,14 @@ def resnet18_graph(batch: int = 1, image: int = 32, num_classes: int = 10,
     """ResNet-18.  ``image=32`` builds the CIFAR-10 stem (3×3/1, no maxpool —
     the paper's §IV-A setting); ``image=224`` builds the ImageNet stem
     (7×7/2 + maxpool — the paper's Fig. 12 setting)."""
+    return _memoized(("resnet18", batch, image, num_classes, with_loss,
+                      dtype),
+                     lambda: _build_resnet18(batch, image, num_classes,
+                                             with_loss, dtype))
+
+
+def _build_resnet18(batch: int, image: int, num_classes: int,
+                    with_loss: bool, dtype: str) -> WorkloadGraph:
     b = GraphBuilder(f"resnet18_b{batch}_i{image}", dtype)
     x = b.input("image", (batch, 3, image, image))
 
@@ -62,6 +89,15 @@ def gpt2_graph(batch: int = 1, seq: int = 256, d_model: int = 768,
                with_loss: bool = True, dtype: str = "bfloat16"
                ) -> WorkloadGraph:
     """Small GPT-2: standard pre-LN transformer with causal attention."""
+    return _memoized(("gpt2", batch, seq, d_model, n_layers, n_heads, vocab,
+                      with_loss, dtype),
+                     lambda: _build_gpt2(batch, seq, d_model, n_layers,
+                                         n_heads, vocab, with_loss, dtype))
+
+
+def _build_gpt2(batch: int, seq: int, d_model: int, n_layers: int,
+                n_heads: int, vocab: int, with_loss: bool,
+                dtype: str) -> WorkloadGraph:
     b = GraphBuilder(f"gpt2_b{batch}_s{seq}_l{n_layers}", dtype)
     dh = d_model // n_heads
     tokens = b.input("tokens", (batch, seq), "int32")
@@ -104,6 +140,14 @@ def gpt2_graph(batch: int = 1, seq: int = 256, d_model: int = 768,
 def mlp_graph(batch: int = 8, d_in: int = 64, widths=(128, 128),
               n_classes: int = 10, with_loss: bool = True) -> WorkloadGraph:
     """Tiny MLP used by unit tests and the quickstart example."""
+    return _memoized(("mlp", batch, d_in, tuple(widths), n_classes,
+                      with_loss),
+                     lambda: _build_mlp(batch, d_in, widths, n_classes,
+                                        with_loss))
+
+
+def _build_mlp(batch: int, d_in: int, widths, n_classes: int,
+               with_loss: bool) -> WorkloadGraph:
     b = GraphBuilder(f"mlp_b{batch}")
     x = b.input("x", (batch, d_in))
     for i, w in enumerate(widths):

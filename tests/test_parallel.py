@@ -6,6 +6,8 @@ sharded tensors, stage splitting), collective cost formulas, engine parity
 reference), and the cache-invalidation contract for parallelism rewrites.
 """
 
+import os
+
 import pytest
 
 from repro.core import (ClusterSpec, Node, ParallelStrategy, TensorSpec,
@@ -432,3 +434,62 @@ def test_nsga2_int_respects_bounds():
     # the front reaches the ideal corner (0, 0) of this separable problem
     assert res.pareto_F[:, 0].min() == 0.0
     assert res.pareto_F[:, 1].min() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# strategy-keyed rewrite cache (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(
+    os.environ.get("REPRO_SANITIZE", "") not in ("", "0"),
+    reason="asserts warm rewrite-cache behavior the sanitizer bypasses by design")
+def test_parallel_rewrite_cache_warm_bit_for_bit(mlp_tg):
+    """A repeat ``evaluate_parallel`` serves the collective-injection
+    rewrite, the manual-fusion partitions, the microbatch bodies and the
+    wire bytes from the strategy-keyed cache — bit-identical results, and
+    the plan shares stage graphs with the cached entry."""
+    from repro.core.parallel import rewrite_cache_stats
+    cluster = edge_cluster(4)
+    strat = ParallelStrategy(data=2, pipeline=2, microbatches=4)
+    engine = get_engine(cluster.chip)
+    r0 = evaluate_parallel(mlp_tg, cluster, strat, engine=engine)
+    h0 = rewrite_cache_stats["hits"]
+    r1 = evaluate_parallel(mlp_tg, cluster, strat, engine=engine)
+    assert rewrite_cache_stats["hits"] > h0
+    assert (r1.latency, r1.energy, r1.peak_mem, r1.offchip_bytes,
+            r1.wire_bytes, r1.spill_bytes, r1.throughput) == \
+        (r0.latency, r0.energy, r0.peak_mem, r0.offchip_bytes,
+         r0.wire_bytes, r0.spill_bytes, r0.throughput)
+    p0 = parallelize(mlp_tg, strat, cluster)
+    p1 = parallelize(mlp_tg, strat, cluster)
+    assert [id(sg) for sg in p0.stage_graphs] == \
+        [id(sg) for sg in p1.stage_graphs]
+
+
+def test_rewrite_cache_invalidates_on_graph_mutation(mlp_tg):
+    """Mutating the training graph bumps its version, so the fingerprint
+    part of the cache key changes and a fresh rewrite is built."""
+    tg = build_training_graph(mlp_graph(8), "adam")
+    cluster = edge_cluster(2)
+    strat = ParallelStrategy(data=2)
+    p0 = parallelize(tg, strat, cluster)
+    nd = next(n for n in tg.graph.nodes.values() if n.op == "gemm")
+    d = dict(nd.dims)
+    tg.graph.retune_node(nd.name, dims=d, flops=nd.flops + 1)
+    p1 = parallelize(tg, strat, cluster)
+    assert p1.stage_graphs[0] is not p0.stage_graphs[0]
+
+
+def test_rewrite_cache_bypassed_under_sanitizer(mlp_tg, monkeypatch):
+    cluster = edge_cluster(2)
+    strat = ParallelStrategy(data=2)
+    r0 = evaluate_parallel(mlp_tg, cluster, strat)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    p_a = parallelize(mlp_tg, strat, cluster)
+    p_b = parallelize(mlp_tg, strat, cluster)
+    # fresh rewrites both times: nothing served, nothing populated
+    assert p_a.stage_graphs[0] is not p_b.stage_graphs[0]
+    r1 = evaluate_parallel(mlp_tg, cluster, strat)
+    assert (r1.latency, r1.energy, r1.peak_mem) == \
+        (r0.latency, r0.energy, r0.peak_mem)

@@ -262,3 +262,32 @@ def test_batched_population_scoring_exact(widths, batch, pop_seed):
     assert batched == [ev.score_keep(m) for m in pop]
     uniq = len({m.tobytes() for m in pop})
     assert ev.stats["soa"] + ev.stats["scalar"] <= uniq
+
+
+@settings(max_examples=15, deadline=None)
+@given(widths=widths_st, batch=st.sampled_from([1, 4]),
+       pop_seed=st.integers(0, 2**31 - 1))
+def test_batched_ternary_population_scoring_exact(widths, batch, pop_seed):
+    """score_policy_batch == the scalar evaluate_policy oracle on random
+    ternary KEEP/RECOMPUTE/OFFLOAD genomes, bit-for-bit — OFFLOAD genes
+    ride the SoA fast path (DMA splicing on the integer arrays), and the
+    batch never evaluates more than the unique phenotypes."""
+    from repro.core import edge_tpu, evaluate_policy
+    from repro.core.batch import PopulationEvaluator
+    from repro.core.engine import get_engine
+
+    tg = build_training_graph(random_mlp(widths, batch))
+    hda = edge_tpu()
+    eng = get_engine(hda)
+    ev = PopulationEvaluator(tg, hda, engine=eng)
+    acts = activation_set(tg)
+    rng = np.random.default_rng(pop_seed)
+    pop = [rng.integers(0, 3, len(acts)) for _ in range(8)]
+    batched = ev.score_policy_batch(pop)
+    for genome, got in zip(pop, batched, strict=True):
+        pol = {acts[i]: ActivationPolicy(int(genome[i]))
+               for i in range(len(acts))}
+        s = evaluate_policy(tg, hda, pol, engine=eng)
+        assert got == (s.latency, s.energy, float(s.peak_mem))
+    uniq = len({g.astype(np.int8).tobytes() for g in pop})
+    assert ev.stats["soa"] + ev.stats["scalar"] <= uniq

@@ -7,6 +7,7 @@ rescheduling (C009 coherence + the zero-fresh-signings warm-path
 contract), and the resilience DSE sweep."""
 
 import math
+import os
 
 import pytest
 
@@ -188,6 +189,31 @@ def test_degrade_is_coherent_and_stays_warm(mlp_tg):
         part, _ = fusion_partition(sg, d.cluster.chip, "manual", None, engine)
         schedule(sg, d.cluster.chip, part, engine=engine)
     assert sign_count() == before
+
+
+@pytest.mark.skipif(
+    os.environ.get("REPRO_SANITIZE", "") not in ("", "0"),
+    reason="asserts warm rewrite-cache behavior the sanitizer bypasses by design")
+def test_degrade_on_cached_rewrite_signs_nothing_fresh(mlp_tg):
+    """ISSUE 9 acceptance: a *repeat* degrade call is a warm-path lookup —
+    the strategy-keyed rewrite cache serves the stage graphs and the C009
+    verification findings, so the whole call (evaluate + parallelize +
+    verify) costs zero fresh signings and returns bit-identical
+    objectives."""
+    cluster = datacenter_cluster(4)
+    strat = ParallelStrategy(data=2, pipeline=2, microbatches=4)
+    engine = get_engine(cluster.chip)
+    d0 = degrade(mlp_tg, cluster, strat, 1, engine=engine)
+    before = sign_count()
+    d1 = degrade(mlp_tg, cluster, strat, 1, engine=engine)
+    assert sign_count() == before
+    assert d1.strategy == d0.strategy
+    assert (d1.result.latency, d1.result.energy, d1.result.peak_mem) == \
+        (d0.result.latency, d0.result.energy, d0.result.peak_mem)
+    assert d1.findings == d0.findings == []
+    # the cached rewrite's stage graphs are shared between the plans
+    assert [id(sg) for sg in d1.plan.stage_graphs] == \
+        [id(sg) for sg in d0.plan.stage_graphs]
 
 
 def test_degrade_rejects_impossible_losses(mlp_tg):
