@@ -1,0 +1,52 @@
+"""Serving-path benchmark: continuous-batching sweep and warm decode cell.
+
+Two guarded hot paths (scripts/check_bench_regression.py):
+
+* ``serve_sweep`` — ``dse.sweep_serve`` over both slot axes and all three
+  KV policies on a warm engine: the full serving-DSE call pattern of
+  ``examples/serve_lm.py`` (graph memo + signature-memoizing engine);
+* ``serve_decode_warm`` — a single ``evaluate_serve`` cell on a warm
+  engine: the steady-state incremental cost one grid point adds, i.e. the
+  batched-decode scheduling path with all graph/signature caches hot.
+"""
+
+from __future__ import annotations
+
+from repro.core import (ActivationPolicy, edge_cluster, evaluate_serve,
+                        get_engine, sweep_serve)
+
+from .common import dump, emit, timed_min
+
+
+def run(fast: bool = False):
+    slots_list = (4, 16) if fast else (4, 16, 64)
+    chip_counts = (1, 4)
+
+    # cold pass builds the prefill/decode graph memo + engine signatures;
+    # the timed pass below is the steady-state sweep an experiment re-runs
+    sweep_serve(edge_cluster, chip_counts, slots_list=slots_list)
+    points, us_sweep = timed_min(sweep_serve, edge_cluster, chip_counts,
+                                 slots_list=slots_list)
+    best = max(points, key=lambda p: p.result.rps)
+    emit("serve_sweep", us_sweep,
+         f"points={len(points)};best_rps={best.result.rps:.1f}"
+         f"@{best.n_chips}x{best.slots}:{best.policy}")
+    dump("bench_serve_sweep", [p.row() for p in points])
+
+    cluster = edge_cluster(n_chips=4)
+    engine = get_engine(cluster.chip)
+    evaluate_serve(cluster, slots=16, policy=ActivationPolicy.OFFLOAD,
+                   engine=engine)
+    res, us_cell = timed_min(evaluate_serve, cluster, slots=16,
+                             policy=ActivationPolicy.OFFLOAD, engine=engine)
+    emit("serve_decode_warm", us_cell,
+         f"rps={res.rps:.1f};p99_ms={res.p99_ms:.0f};"
+         f"kv_mb={res.kv_bytes / 2**20:.1f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(
 
 from benchmarks import (bench_checkpointing, bench_dse, bench_engine,
                         bench_fusion, bench_fusion_search, bench_memory,
-                        bench_misc, bench_parallel, bench_resilience, common)
+                        bench_misc, bench_parallel, bench_resilience,
+                        bench_serving, common)
 
 
 def main() -> None:
@@ -71,6 +72,8 @@ def main() -> None:
         bench_parallel.run(fast=args.fast)
     if want("resilience"):
         bench_resilience.run()
+    if want("serving"):
+        bench_serving.run(fast=args.fast)
     if want("fig12"):
         bench_checkpointing.run_fig12(pop=8 if args.fast else 16,
                                       gens=4 if args.fast else 10)

@@ -48,6 +48,8 @@ HOT_PATHS = {
     "fusion_search_resnet": "fusion_search",
     "resilience_goodput": "resilience",
     "resilience_degrade": "resilience",
+    "serve_sweep": "serving",
+    "serve_decode_warm": "serving",
 }
 
 #: batched-evaluator entries whose derived column carries a ``share=``

@@ -14,6 +14,9 @@ Layers:
   fusion_search               — boundary-genome NSGA-II fusion-config search
   checkpointing / nsga2       — activation-policy GA (+MILP baseline)
   dse                         — hardware design-space sweeps
+  serving                     — inference-serving model: KV-cache graphs,
+                                continuous batching, request mixes
+                                (KEEP/RECOMPUTE/OFFLOAD KV policies)
   remat_policy                — MONET decision → real jax.checkpoint policy
   verify                      — model-invariant verifier + engine cache-
                                 coherence sanitizer (M/S/C rule codes)
@@ -40,9 +43,9 @@ from .checkpointing import (ACResult, ACSolution, PolicyResult,
                             uniform_policy)
 from .cost_model import (CostModel, NodeCost, collective_wire, comm_cycles,
                          comm_node_cost, dma_cycles, dma_node_cost)
-from .dse import (DSEPoint, ParallelPoint, ResiliencePoint, compute_resource,
-                  pareto_front, spread, sweep, sweep_parallel,
-                  sweep_resilience)
+from .dse import (DSEPoint, ParallelPoint, ResiliencePoint, ServePoint,
+                  compute_resource, pareto_front, spread, sweep,
+                  sweep_parallel, sweep_resilience, sweep_serve)
 from .faultinject import FAULTS, FaultSpec, InjectionReport, inject, \
     run_campaign
 from .engine import (EvalEngine, GraphSigs, clear_engines, get_engine,
@@ -70,12 +73,16 @@ from .resilience import (CheckpointPlan, DegradeResult, GoodputResult,
                          degrade, evaluate_goodput,
                          optimal_checkpoint_interval, resolve_fault)
 from .scheduling import ScheduleResult, quotient_dag, schedule
+from .serving import (DEFAULT_MIX, GPT2_SMALL, RequestClass, RequestMix,
+                      ServeResult, evaluate_serve, kv_bytes_per_token,
+                      max_keep_slots)
 from .trace import trace_fn, trace_model
 from .training_transform import (OPTIMIZERS, TrainingGraph,
                                  build_training_graph)
 from .verify import (RULES, Finding, VerificationError, sanitize_enabled,
                      verify_cache, verify_degrade, verify_graph,
                      verify_parallel, verify_result, verify_schedule)
-from .zoo import gpt2_graph, mlp_graph, resnet18_graph
+from .zoo import (gpt2_decode_graph, gpt2_graph, gpt2_prefill_graph,
+                  mlp_graph, resnet18_graph)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 
-from .graph import Node, WorkloadGraph, conv_flops, gemm_flops
+from .graph import Node, WorkloadGraph, conv_flops, dtype_bytes, gemm_flops
 
 
 class GraphBuilder:
@@ -81,16 +81,24 @@ class GraphBuilder:
         return out
 
     def matmul(self, a: str, b: str, name: str | None = None,
-               op: str = "gemm") -> str:
+               op: str = "gemm", transpose_b: bool = False) -> str:
         """Activation × activation batched matmul (attention scores etc.).
-        a: (..., M, K)   b: (..., K, N)."""
+        a: (..., M, K)   b: (..., K, N) — or (..., N, K) with
+        ``transpose_b=True`` (decode attention reads the K cache in its
+        stored layout, no materialized transpose copy)."""
         sa, sb = self.shape(a), self.shape(b)
-        assert sa[-1] == sb[-2], (sa, sb)
+        if transpose_b:
+            assert sa[-1] == sb[-1], (sa, sb)
+            n = sb[-2]
+        else:
+            assert sa[-1] == sb[-2], (sa, sb)
+            n = sb[-1]
         batch = int(math.prod(sa[:-2])) or 1
         nm = name or self._uid("mm")
-        out = self._t(f"{nm}.out", (*sa[:-2], sa[-2], sb[-1]))
-        dims = dict(B=batch, M=sa[-2], N=sb[-1], K=sa[-1])
-        self._node(op, [a, b], [out], dims, gemm_flops(dims), name=nm)
+        out = self._t(f"{nm}.out", (*sa[:-2], sa[-2], n))
+        dims = dict(B=batch, M=sa[-2], N=n, K=sa[-1])
+        self._node(op, [a, b], [out], dims, gemm_flops(dims), name=nm,
+                   meta={"transpose_b": True} if transpose_b else None)
         return out
 
     # -- element-wise / misc --------------------------------------------------
@@ -196,4 +204,98 @@ class GraphBuilder:
         out = self._t(f"{name}.out", (1,), "float32")
         self.g.add_node(Node(name, "loss", "loss", dict(N=n), [logits, labels],
                              [out], 6 * n))
+        return out
+
+    # -- collectives (tensor-parallel serving shards) -------------------------
+
+    def all_reduce(self, x: str, p: int, name: str | None = None) -> str:
+        """Sum-reduce ``x`` across a ``p``-chip group (op-class ``comm``,
+        costed on the ``ici`` resource).  Same dims convention as the
+        parallel-training rewrite (``parallel._comm_node``): ``N`` payload
+        elements × ``E`` bytes × ``P`` group degree.  Kind ``fwd`` so the
+        reduced tensor classifies as an activation, matching the
+        tensor-parallel forward idiom."""
+        shp = self.shape(x)
+        n = int(math.prod(shp)) or 1
+        nm = name or self._uid("ar")
+        out = self._t(f"{nm}.out", shp)
+        self._node("all_reduce", [x], [out],
+                   dict(N=n, P=int(p), E=dtype_bytes(self.dtype)), 0,
+                   name=nm)
+        return out
+
+    # -- KV cache (inference serving — repro.core.serving) --------------------
+    #
+    # All KV ops carry kind="kv", which classifies their outputs into the
+    # kv_cache memory category (memory.category_code) and keeps them out of
+    # the checkpointable-activation set; training_transform treats them as
+    # stop-gradient sinks.  See docs/serving.md.
+
+    def kv_input(self, name: str, shape, paged: bool = False,
+                 dtype=None) -> str:
+        """Source node materializing one layer's cached K or V block.
+        Resident mode (``kv_read``, op-class ``move``) reads it from on-chip
+        HBM; paged mode (``kv_load``, op-class ``dma``) streams it in from
+        the host KV pool over the dedicated ``dma`` resource with a
+        just-in-time residency window (``memory._FETCH_OPS``)."""
+        out = self._t(name, shape, dtype)
+        n = int(math.prod(shape)) or 1
+        self._node("kv_load" if paged else "kv_read", [], [out],
+                   dict(N=n, E=dtype_bytes(dtype or self.dtype)), 0,
+                   name=f"{name}.rd", kind="kv")
+        return out
+
+    def kv_append(self, cache: str, new: str, axis: int = 2,
+                  name: str | None = None) -> str:
+        """In-place append of the current step's K/V block to the cache
+        along ``axis``.  ``N`` counts only the *written* elements (the new
+        block) — the append is an in-place page write, not a cache copy —
+        while the output tensor carries the full post-append bytes for the
+        lifetime model."""
+        sc, sn = self.shape(cache), self.shape(new)
+        out_shape = tuple(d + sn[axis] if i == axis else d
+                          for i, d in enumerate(sc))
+        nm = name or self._uid("kvcat")
+        out = self._t(f"{nm}.out", out_shape)
+        n = int(math.prod(sn)) or 1
+        self._node("concat", [cache, new], [out], dict(N=n), 0, name=nm,
+                   kind="kv", meta={"axis": axis})
+        return out
+
+    def kv_write(self, x: str, name: str | None = None) -> str:
+        """Materialize a computed K/V block into the resident cache pool
+        (prefill): a ``move``-class copy whose output classifies as
+        ``kv_cache`` instead of ``activations``."""
+        shp = self.shape(x)
+        nm = name or self._uid("kvw")
+        out = self._t(nm if name else f"{nm}.out", shp)
+        n = int(math.prod(shp)) or 1
+        self._node("kv_write", [x], [out], dict(N=n), 0, name=f"{nm}.wr",
+                   kind="kv")
+        return out
+
+    def kv_commit(self, caches, name: str = "kv_out") -> str:
+        """Terminal cache-commit barrier: consumes every per-layer cache
+        tensor so resident (KEEP) caches stay live to the end of the step —
+        the lifetime model then charges the full KV footprint at the peak.
+        Emits a 1-byte completion token."""
+        out = self._t(f"{name}.tok", (1,), "int8")
+        self._node("kv_commit", list(caches), [out], dict(N=1), 0, name=name,
+                   kind="kv")
+        return out
+
+    def kv_store(self, cache: str, elems: int | None = None,
+                 name: str | None = None) -> str:
+        """Page the (updated) cache out to the host KV pool over the ``dma``
+        resource.  ``elems`` bounds the transferred payload — a paged decode
+        step only writes the newly appended block, not the whole cache —
+        and the 1-byte marker it leaves behind is the only thing that stays
+        on-chip."""
+        spec = self.g.tensors[cache]
+        nm = name or f"{cache}.st"
+        out = self._t(f"{nm}.off", (1,), "int8")
+        n = int(elems if elems is not None else spec.size) or 1
+        self._node("kv_store", [cache], [out],
+                   dict(N=n, E=dtype_bytes(spec.dtype)), 0, name=nm,
+                   kind="kv")
         return out

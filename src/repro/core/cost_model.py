@@ -157,6 +157,22 @@ def dma_node_cost(cyc: float, inb: float, outb: float,
     return NodeCost(cycles, offchip, 0.0, 0.0, offchip * hda.offchip_e, "dma")
 
 
+#: KV-cache bookkeeping ops that move no data (repro.core.serving):
+#: ``kv_read`` sources an already-resident cache (its streaming cost is
+#: paid by the attention consumers' operand bytes, exactly as for
+#: parameters and graph inputs — only the host-paged ``kv_load`` pays a
+#: transfer, on the ``dma`` resource) and ``kv_commit`` is the end-of-step
+#: liveness barrier that pins caches to the step boundary.
+KV_FREE_OPS = frozenset({"kv_read", "kv_commit"})
+
+
+def kv_free_node_cost(core_name: str) -> NodeCost:
+    """NodeCost of a :data:`KV_FREE_OPS` bookkeeping node: one cycle, no
+    traffic, no energy — the tensors it touches already live in
+    off-chip-attached memory and only change liveness, not location."""
+    return NodeCost(1.0, 0.0, 0.0, 0.0, 0.0, core_name)
+
+
 def comm_node_cost(cyc: float, inb: float, outb: float, wire: float,
                    hda: HDASpec) -> NodeCost:
     """NodeCost of a collective: the payload still streams through each
@@ -303,6 +319,8 @@ class CostModel:
 
     def node_cost(self, node: Node, resident: set = frozenset(),
                   internal_out: set = frozenset()) -> NodeCost:
+        if node.op in KV_FREE_OPS:
+            return kv_free_node_cost(self._simd.name)
         if node.op_class == "dma":
             return dma_node_cost(dma_cycles(node, self.hda),
                                  self.in_bytes(node, resident),
@@ -362,7 +380,11 @@ class CostModel:
         for nd in node_objs:
             c = self.node_cost(nd, resident=resident | internal,
                                internal_out=internal)
-            if nd.op_class == "comm":
+            if nd.op in KV_FREE_OPS:   # bookkeeping: no data movement
+                core = self.core_for(nd)
+                per_core_cycles[core.name] = (
+                    per_core_cycles.get(core.name, 0.0) + 1.0)
+            elif nd.op_class == "comm":
                 per_core_cycles["ici"] = (per_core_cycles.get("ici", 0.0)
                                           + comm_cycles(nd, self.hda))
             elif nd.op_class == "dma":

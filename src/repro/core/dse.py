@@ -254,6 +254,64 @@ def sweep_resilience(workloads: dict, make_cluster, chip_counts,
     return points
 
 
+@dataclass
+class ServePoint:
+    """One (chip count × slots × KV policy) cell of an inference-serving
+    sweep (``repro.core.serving``, docs/serving.md)."""
+
+    n_chips: int
+    slots: int
+    policy: str
+    result: object                  # ServeResult
+
+    def row(self) -> dict:
+        return self.result.as_row()
+
+
+def sweep_serve(make_cluster, chip_counts, slots_list=(4, 16, 64),
+                policies=None, mix=None, model=None,
+                dtype: str = "bfloat16") -> list:
+    """Inference-serving scale sweep: evaluate every KV policy at every
+    (chip count × concurrent-slot) cell of the continuous-batching model.
+
+    ``make_cluster(n)``: ClusterSpec factory (``edge_cluster`` /
+    ``datacenter_cluster``); ``slots_list``: concurrent decoding sequences
+    per cell; ``policies``: KV residency policies (default: KEEP /
+    RECOMPUTE / OFFLOAD — :class:`~repro.core.memory.ActivationPolicy`);
+    ``mix`` / ``model``: request mix and served-model overrides
+    (``serving.DEFAULT_MIX`` / ``serving.GPT2_SMALL``).  One engine per
+    cluster is shared across every cell, so the sweep is dominated by
+    warm-cache evaluations; cells whose chip count cannot shard the model
+    (``ValueError``) are skipped like inapplicable parallel strategies.
+    Typical front extraction (requests/sec × tail latency × per-chip
+    memory, all minimized)::
+
+        front = pareto_front(points, [lambda p: -p.result.rps,
+                                      lambda p: p.result.p99_ms,
+                                      lambda p: p.result.peak_mem])
+    """
+    from .memory import ActivationPolicy
+    from .serving import evaluate_serve
+
+    if policies is None:
+        policies = (ActivationPolicy.KEEP, ActivationPolicy.RECOMPUTE,
+                    ActivationPolicy.OFFLOAD)
+    points: list[ServePoint] = []
+    for n in chip_counts:
+        cluster = make_cluster(n)
+        engine = get_engine(cluster.chip)
+        for slots in slots_list:
+            for pol in policies:
+                try:
+                    r = evaluate_serve(cluster, mix=mix, slots=slots,
+                                       policy=pol, model=model, dtype=dtype,
+                                       engine=engine)
+                except ValueError:
+                    continue        # cell inapplicable (e.g. tp ∤ heads)
+                points.append(ServePoint(n, slots, pol.name, r))
+    return points
+
+
 def pareto_front(points: list, metrics) -> list:
     """Non-dominated subset w.r.t. ``metrics``: callables point→float
     (minimize)."""

@@ -39,9 +39,10 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from .accelerators import CoreSpec, HDASpec
-from .cost_model import (NodeCost, collective_wire, comm_node_cost,
-                         comm_payload, compute_cycles, dma_node_cost,
-                         node_cost_arith, subgraph_tail)
+from .cost_model import (KV_FREE_OPS, NodeCost, collective_wire,
+                         comm_node_cost, comm_payload, compute_cycles,
+                         dma_node_cost, kv_free_node_cost, node_cost_arith,
+                         subgraph_tail)
 from .graph import Node, WorkloadGraph, dtype_bytes
 from .memory import MEM_CATEGORIES, category_code
 
@@ -200,8 +201,9 @@ def _sign_node(graph: WorkloadGraph, s: GraphSigs, name: str) -> None:
     eb = dtype_bytes(tensors[outs[0]].dtype) if outs else 2
     cls = nd.op_class
     # comm ops differ in wire/hop formulas per collective (and dma ops in
-    # transfer direction), so the concrete op is part of the signature
-    sig = (nd.op if cls in ("comm", "dma") else cls,
+    # transfer direction), so the concrete op is part of the signature;
+    # KV bookkeeping ops are free unlike every other move op
+    sig = (nd.op if cls in ("comm", "dma") or nd.op in KV_FREE_OPS else cls,
            tuple(sorted(nd.dims.items())), nd.flops,
            in_bytes, in_pat, out_bytes, eb)
     i = _sig_id(sig)
@@ -488,9 +490,13 @@ class BoundEngine:
         k = (ckey, sid)
         cyc = _CYC.get(k)
         if cyc is None:
-            core = eng.core_for_class(nd.op_class)
-            cyc = compute_cycles(nd, core, eng.tp_for_class(nd.op_class, core),
-                                 eng.hda)
+            if nd.op in KV_FREE_OPS:   # bookkeeping: no data movement
+                cyc = 1.0
+            else:
+                core = eng.core_for_class(nd.op_class)
+                cyc = compute_cycles(nd, core,
+                                     eng.tp_for_class(nd.op_class, core),
+                                     eng.hda)
             _CYC[k] = cyc
         return cyc
 
@@ -506,6 +512,10 @@ class BoundEngine:
         eng.stats["node_misses"] += 1
         tb = self.sigs.tb
         core = eng.core_for_class(nd.op_class)
+        if nd.op in KV_FREE_OPS:    # bookkeeping node: free (see
+            c = kv_free_node_cost(core.name)   # cost_model.KV_FREE_OPS)
+            _NODE_COSTS[key] = c
+            return c
         cyc = self._cycles(ckey, sid, nd)
         seen: set = set()
         inb = 0

@@ -114,6 +114,15 @@ OP_CLASS = {
     # costed against off-chip bandwidth on a dedicated 'dma' resource
     "offload": "dma",
     "fetch": "dma",
+    # inference-serving KV-cache ops (repro.core.serving — docs/serving.md):
+    # resident cache read/append/commit move on-chip; the paged variants
+    # stream the cache to/from the host pool over the 'dma' resource
+    "concat": "move",
+    "kv_read": "move",
+    "kv_write": "move",
+    "kv_commit": "move",
+    "kv_load": "dma",
+    "kv_store": "dma",
 }
 
 

@@ -10,9 +10,13 @@ and TRIM (training DSE must co-optimize compute with the memory system),
 everything now routes through one lifetime-accurate model:
 
 * **Tensor categories** — every tensor is classified as
-  weights / gradients / optimizer-state / activations / workspace / inputs
-  (``tensor_category``), and the static footprint splits accordingly
-  (``static_breakdown``).
+  weights / gradients / optimizer-state / inputs / activations / workspace /
+  kv-cache (``tensor_category``), and the static footprint splits
+  accordingly (``static_breakdown``).  The ``kv_cache`` category carries
+  decode-time attention state for the inference-serving axis
+  (docs/serving.md): per-sequence K/V bytes produced by ``kv``-kind nodes,
+  resident across decode steps under KEEP or paged to the host pool over
+  the ``dma`` resource under OFFLOAD (``kv_load`` / ``kv_store`` ops).
 * **Lifetime intervals** — ``build_lifetime_plan`` derives, from a schedule
   partition, the event-based start/end step of every produced tensor
   (structure-of-arrays, cached per ``(fingerprint, partition)`` by the
@@ -58,16 +62,29 @@ OPTIMIZER_STATE = "optimizer_state"
 INPUTS = "inputs"
 ACTIVATIONS = "activations"
 WORKSPACE = "workspace"
+KV_CACHE = "kv_cache"
 
 #: category order also fixes the integer codes of the SoA lifetime arrays
+#: (``kv_cache`` is appended last so the pre-serving codes stay stable)
 MEM_CATEGORIES = (WEIGHTS, GRADIENTS, OPTIMIZER_STATE, INPUTS,
-                  ACTIVATIONS, WORKSPACE)
+                  ACTIVATIONS, WORKSPACE, KV_CACHE)
 _CAT_CODE = {c: i for i, c in enumerate(MEM_CATEGORIES)}
 _ACT_CODE = _CAT_CODE[ACTIVATIONS]
 
 #: producer kinds whose outputs are activations (a pipeline ``recv`` of a
 #: forward tensor keeps kind 'fwd', so stage graphs classify consistently)
 _ACT_KINDS = frozenset({"fwd", "loss", "recompute"})
+
+#: producer kinds whose outputs are decode-time KV-cache state (serving
+#: graphs — repro.core.serving / docs/serving.md).  Checked before the
+#: activation rule so cache reads/appends never masquerade as activations.
+_KV_KINDS = frozenset({"kv"})
+
+#: DMA ops whose outputs are re-materialized just-in-time: the classic
+#: activation ``fetch`` and the serving-axis KV page-in (``kv_load``).
+#: Both get the double-buffered residency window (``_fetch_start_override``)
+#: and consumer-inherited list-scheduler priorities.
+_FETCH_OPS = frozenset({"fetch", "kv_load"})
 
 
 def category_code(spec: TensorSpec, producer_kind: str | None) -> int:
@@ -81,6 +98,8 @@ def category_code(spec: TensorSpec, producer_kind: str | None) -> int:
         return _CAT_CODE[OPTIMIZER_STATE]
     if spec.is_input:
         return _CAT_CODE[INPUTS]
+    if producer_kind in _KV_KINDS:
+        return _CAT_CODE[KV_CACHE]
     if producer_kind in _ACT_KINDS:
         return _CAT_CODE[ACTIVATIONS]
     if producer_kind in BWD_KINDS:
@@ -90,8 +109,9 @@ def category_code(spec: TensorSpec, producer_kind: str | None) -> int:
 
 def tensor_category(graph: WorkloadGraph, name: str) -> str:
     """Memory category of one tensor: role flags first (weights /
-    optimizer-state / inputs), then the producing node's kind (activations
-    from forward/recompute, gradients from backward, workspace otherwise)."""
+    optimizer-state / inputs), then the producing node's kind (kv-cache
+    from ``kv`` serving nodes, activations from forward/recompute,
+    gradients from backward, workspace otherwise)."""
     prod = graph.producer.get(name)
     kind = graph.nodes[prod].kind if prod is not None else None
     return MEM_CATEGORIES[category_code(graph.tensors[name], kind)]
@@ -163,7 +183,7 @@ def build_lifetime_plan(graph: WorkloadGraph, partition: list,
                     prod_kind[t] = nd.kind
             if nd.op_class == "dma":
                 spill += int(comm_payload(nd.dims))
-                if nd.op == "fetch":
+                if nd.op in _FETCH_OPS:
                     fetched.update(nd.outputs)
 
     if from_sigs:
@@ -320,8 +340,9 @@ def schedule_priorities(graph: WorkloadGraph, partition: list,
                         topo_idx: dict | None = None,
                         has_fetch: bool | None = None) -> list[int]:
     """List-scheduler priority per subgraph: the minimal topo index of its
-    nodes — except pure DMA ``fetch`` subgraphs, which inherit their
-    consumers' priority so a re-materialized activation is fetched
+    nodes — except pure DMA fetch subgraphs (``fetch`` / serving ``kv_load``
+    page-ins), which inherit their consumers' priority so a re-materialized
+    tensor is fetched
     just-in-time (its resident interval starts right before the backward
     consumer instead of right after the offload).  ``has_fetch=False``
     (known e.g. from a built :class:`LifetimePlan`) skips the node scan."""
@@ -331,7 +352,7 @@ def schedule_priorities(graph: WorkloadGraph, partition: list,
     consumers = graph.consumers
     gi = topo_idx.__getitem__
     fetches = () if has_fetch is False else \
-        {n for n, nd in nodes.items() if nd.op == "fetch"}
+        {n for n, nd in nodes.items() if nd.op in _FETCH_OPS}
     if not fetches:        # common case: plain min-topo priorities
         return [gi(sg[0]) if len(sg) == 1 else min(map(gi, sg))
                 for sg in partition]

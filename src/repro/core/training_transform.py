@@ -177,6 +177,11 @@ def _build_training_graph(fwd: WorkloadGraph, optimizer: str,
             _bwd_loss(ad, nd)
             continue
         if nd.kind != "fwd":
+            # non-fwd kinds get no adjoints.  In particular kind="kv" nodes
+            # (serving KV-cache plumbing — repro.core.serving) are
+            # stop-gradient sinks: a cached K/V block is a constant w.r.t.
+            # the current step's parameters, so training a graph that
+            # sources one differentiates only the fresh compute.
             continue
         d_outs = [ad.finalize(t) for t in nd.outputs]
         if all(d is None for d in d_outs):

@@ -75,6 +75,9 @@ RULES = {
             "payload bytes disagree with the tensor",
     "M024": "dropped activation: a forward tensor has no consumer and no "
             "policy (recompute/offload) handling it",
+    "M025": "KV-cache conservation: an append's output shape, a paging "
+            "payload, or a kv-kind output's memory category is "
+            "inconsistent (repro.core.serving)",
     # -- parallel symmetry (M03x) ------------------------------------------
     "M030": "collective degree mismatch: a collective's P disagrees with "
             "the strategy (tp/dp groups, send/recv pairs)",
@@ -94,8 +97,9 @@ RULES = {
             "interval peak, or differs from the reference lifetime model",
     "S006": "latency/busy mismatch: the result disagrees with an "
             "independent replay of the list schedule",
-    "S007": "spill imbalance: offload/fetch byte totals or DMA busy "
-            "cycles disagree with the schedule's spill accounting",
+    "S007": "spill imbalance: offload/fetch byte totals, one-way KV paging "
+            "totals, or DMA busy cycles disagree with the schedule's spill "
+            "accounting",
     # -- engine cache coherence (C00x) -------------------------------------
     "C001": "signature drift: an incremental node signature differs from "
             "a from-scratch re-signing",
@@ -411,6 +415,50 @@ def _check_training(graph: WorkloadGraph, out: list) -> None:
                 _f(out, "M023", name,
                    "fetch input is not an offload marker")
 
+        # M025: KV-cache conservation (repro.core.serving graphs)
+        if nd.op in ("kv_read", "kv_load", "kv_write", "kv_store",
+                     "kv_commit") or \
+                (nd.op == "concat" and nd.kind == "kv"):
+            if nd.kind != "kv":
+                _f(out, "M025", name,
+                   f"{nd.op} carries kind {nd.kind!r} (want 'kv' so its "
+                   f"outputs classify as kv_cache)")
+            if nd.op == "concat":
+                axis = int(nd.meta.get("axis", 2))
+                cache = tensors.get(nd.inputs[0]) if nd.inputs else None
+                new = tensors.get(nd.inputs[1]) if len(nd.inputs) > 1 \
+                    else None
+                spec = tensors.get(nd.outputs[0]) if nd.outputs else None
+                if cache is not None and new is not None and \
+                        spec is not None:
+                    want = tuple(d + new.shape[axis] if i == axis else d
+                                 for i, d in enumerate(cache.shape))
+                    if spec.shape != want:
+                        _f(out, "M025", name,
+                           f"append output shape {spec.shape} != cache "
+                           f"{cache.shape} + block along axis {axis}")
+                    if int(nd.dims.get("N", 0)) != new.size:
+                        _f(out, "M025", name,
+                           f"append writes {nd.dims.get('N')} elements != "
+                           f"new block {new.size}")
+            elif nd.op in ("kv_load", "kv_read"):
+                spec = tensors.get(nd.outputs[0]) if nd.outputs else None
+                if nd.op == "kv_load" and spec is not None and \
+                        int(comm_payload(nd.dims)) != spec.bytes:
+                    _f(out, "M025", name,
+                       f"paged-in payload {comm_payload(nd.dims)} != cache "
+                       f"bytes {spec.bytes}")
+                if nd.outputs and not graph.consumers.get(nd.outputs[0]):
+                    _f(out, "M025", nd.outputs[0],
+                       "sourced cache has no consumer (dead read)")
+            elif nd.op == "kv_store":
+                src = tensors.get(nd.inputs[0]) if nd.inputs else None
+                if src is not None and \
+                        int(comm_payload(nd.dims)) > src.bytes:
+                    _f(out, "M025", name,
+                       f"paged-out payload {comm_payload(nd.dims)} exceeds "
+                       f"source bytes {src.bytes}")
+
     # M024: forward activations must be consumed or policy-handled
     if has_bwd:
         for t, p in graph.producer.items():
@@ -715,23 +763,29 @@ def verify_schedule(graph: WorkloadGraph, hda, partition: list,
            f"activation_bytes {result.activation_bytes} != graph's "
            f"{graph.activation_bytes()}")
 
-    # S007: spill accounting
-    off_total = fetch_total = 0
+    # S007: spill accounting.  Activation offload/fetch pairs must balance
+    # byte-for-byte; KV paging (kv_load / kv_store — repro.core.serving) is
+    # legitimately one-directional (a decode step reads the whole cache back
+    # but writes only the new block), so it is tallied separately and only
+    # checked against the schedule's total.
+    off_total = fetch_total = kv_total = 0
     for nd in graph.nodes.values():
         if nd.op_class != "dma":
             continue
         p = int(comm_payload(nd.dims))
         if nd.op == "offload":
             off_total += p
-        else:
+        elif nd.op == "fetch":
             fetch_total += p
+        else:
+            kv_total += p
     if off_total != fetch_total:
         _f(out, "S007", graph.name,
            f"offload bytes {off_total} != fetch bytes {fetch_total}")
-    if result.spill_bytes != off_total + fetch_total:
+    if result.spill_bytes != off_total + fetch_total + kv_total:
         _f(out, "S007", graph.name,
            f"spill_bytes {result.spill_bytes} != DMA payload total "
-           f"{off_total + fetch_total}")
+           f"{off_total + fetch_total + kv_total}")
     if not _close(result.spill_cycles, busy.get("dma", 0.0)):
         _f(out, "S007", graph.name,
            f"spill_cycles {result.spill_cycles} != replayed dma busy "

@@ -1,132 +1,64 @@
-"""Batched serving driver with a simple continuous-batching slot manager.
+"""Serving front-end: price one continuous-batching deployment cell.
 
-Requests arrive with prompts of varying length; slots are packed into a
-fixed-batch decode step (the compiled program never changes shape).
-Finished sequences free their slot for queued requests — the standard
-serving pattern (vLLM-style at slot granularity, TPU-friendly static
-shapes).
+Thin CLI over :mod:`repro.core.serving` (see docs/serving.md).  Picks a
+cluster site, slot count, and KV residency policy, evaluates the
+steady-state continuous-batching model for the small-GPT-2 workload, and
+prints the throughput / tail-latency / memory / power report for that one
+cell.  For full sweeps and Pareto fronts use ``examples/serve_lm.py`` or
+:func:`repro.core.dse.sweep_serve`.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
-        --requests 8 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --site edge --chips 4 \
+        --slots 16 --policy offload
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-from dataclasses import dataclass, field
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..core.accelerators import datacenter_cluster, edge_cluster
+from ..core.memory import ActivationPolicy
+from ..core.serving import DEFAULT_MIX, evaluate_serve, max_keep_slots
 
-from ..configs import get_config, smoke_config
-from ..models import init_cache, init_params
-from ..training.train_step import make_serve_step
+_SITES = {"edge": edge_cluster, "datacenter": datacenter_cluster}
+_POLICIES = {p.name.lower(): p for p in ActivationPolicy}
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # (L,) int32
-    max_new: int
-    out: list = field(default_factory=list)
-    done: bool = False
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--site", choices=sorted(_SITES), default="edge")
+    ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--policy", choices=sorted(_POLICIES), default="keep")
+    args = ap.parse_args(argv)
 
+    cluster = _SITES[args.site](n_chips=args.chips)
+    try:
+        res = evaluate_serve(cluster, slots=args.slots,
+                             policy=_POLICIES[args.policy])
+    except ValueError as e:          # e.g. tp degree not dividing n_heads
+        ap.error(str(e))
 
-class SlotServer:
-    """Fixed-slot continuous batching over the single-token decode step."""
-
-    def __init__(self, cfg, batch_slots: int = 4, max_seq: int = 128,
-                 seed: int = 0):
-        self.cfg = cfg
-        self.B = batch_slots
-        self.max_seq = max_seq
-        self.params = init_params(cfg, jax.random.PRNGKey(seed))
-        self.cache = init_cache(cfg, batch_slots, max_seq)
-        self.serve = jax.jit(make_serve_step(cfg))
-        self.slot_req: list = [None] * batch_slots
-        self.slot_pos = np.zeros(batch_slots, np.int32)
-        self.queue: list[Request] = []
-        self.steps = 0
-
-    # NOTE: per-slot positions differ; the compiled step takes one scalar
-    # pos.  We advance the *max* pos and mask per-slot validity through the
-    # prompt feed: slots run in lockstep per admission wave (simple and
-    # static-shape; a production server would carry a per-slot pos vector).
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _admit(self):
-        for s in range(self.B):
-            if self.slot_req[s] is None and self.queue:
-                self.slot_req[s] = self.queue.pop(0)
-                self.slot_pos[s] = 0
-
-    def run(self) -> list[Request]:
-        finished: list[Request] = []
-        while self.queue or any(r is not None for r in self.slot_req):
-            self._admit()
-            active = [r for r in self.slot_req if r is not None]
-            if not active:
-                break
-            # build the current token for each slot (prompt feed or last out)
-            toks = np.zeros((self.B, 1), np.int32)
-            for s, r in enumerate(self.slot_req):
-                if r is None:
-                    continue
-                p = self.slot_pos[s]
-                if p < len(r.prompt):
-                    toks[s, 0] = r.prompt[p]
-                elif r.out:
-                    toks[s, 0] = r.out[-1]
-            pos = int(self.slot_pos.max())
-            nxt, self.cache = self.serve(self.params, self.cache,
-                                         jnp.asarray(toks), jnp.int32(pos))
-            nxt = np.asarray(nxt)
-            self.steps += 1
-            for s, r in enumerate(self.slot_req):
-                if r is None:
-                    continue
-                self.slot_pos[s] += 1
-                if self.slot_pos[s] >= len(r.prompt):
-                    r.out.append(int(nxt[s]))
-                if (len(r.out) >= r.max_new or
-                        self.slot_pos[s] >= self.max_seq - 1):
-                    r.done = True
-                    finished.append(r)
-                    self.slot_req[s] = None
-        return finished
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
-
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.input_mode != "tokens":
-        raise SystemExit("serve driver demo requires a token-input arch")
-    srv = SlotServer(cfg, batch_slots=args.slots)
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    for i in range(args.requests):
-        L = int(rng.integers(3, 10))
-        srv.submit(Request(i, rng.integers(1, cfg.vocab, L).astype(np.int32),
-                           args.max_new))
-    done = srv.run()
-    dt = time.time() - t0
-    tok = sum(len(r.out) for r in done)
-    print(f"served {len(done)} requests, {tok} tokens, {srv.steps} steps "
-          f"in {dt:.2f}s ({tok / dt:.1f} tok/s)")
-    for r in done[:3]:
-        print(f"  req {r.rid}: prompt {len(r.prompt)} -> {r.out[:8]}...")
+    print(f"{args.site} x{args.chips} ({cluster.chip.name}), "
+          f"{args.slots} slots, policy={args.policy}")
+    print(f"  throughput : {res.rps:10.2f} req/s   "
+          f"{res.tokens_per_s:10.1f} tok/s")
+    print(f"  latency    : p50 {res.p50_ms:10.1f} ms   "
+          f"p99 {res.p99_ms:10.1f} ms   step {res.step_us:.1f} us")
+    print(f"  memory     : peak {res.peak_mem / 2**20:8.1f} MB of "
+          f"{res.mem_capacity / 2**20:.1f} MB/chip   "
+          f"kv {res.kv_bytes / 2**20:.1f} MB"
+          f"{'' if res.feasible else '   (OVER CAPACITY)'}")
+    print(f"  power      : {res.watts:8.2f} W   "
+          f"{res.tokens_per_joule:.1f} tok/J")
+    for name, d in sorted(res.per_class.items()):
+        print(f"  class {name:10s}: ctx {d['ctx']:5d}  "
+              f"prefill {d['prefill_ms']:8.1f} ms  "
+              f"step {d['step_us']:8.1f} us  e2e {d['e2e_ms']:10.1f} ms")
+    ctx = int(DEFAULT_MIX.mean(lambda c: c.steady_ctx))
+    print(f"  planning   : max KEEP slots at mean ctx {ctx} = "
+          f"{max_keep_slots(cluster, ctx)}")
+    return 0 if res.feasible else 1
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -6,8 +6,10 @@ each under ``fusion="search"`` and all three uniform activation policies
 (KEEP / RECOMPUTE / OFFLOAD), plus one dp/tp/pp parallel configuration and
 its degraded-mode (survivor-set) remap — the C009 coherence pass plus a
 zero-fresh-signings assertion that the degrade rewrite stayed on the
-engine's warm path.  Prints every finding (rule id, severity, offending
-name) and exits non-zero if any is reported.
+engine's warm path — and the inference-serving graphs (prefill, resident
+decode, paged decode) under the M-series KV-conservation rules (M025).
+Prints every finding (rule id, severity, offending name) and exits
+non-zero if any is reported.
 
 Options:
   --quick    verify a small MLP only (seconds instead of ~a minute)
@@ -22,8 +24,9 @@ import sys
 from repro.core import (ActivationPolicy, Finding, FusionSearchConfig,
                         ParallelStrategy, build_training_graph, degrade,
                         edge_cluster, edge_tpu, evaluate_parallel, get_engine,
-                        gpt2_graph, mlp_graph, parallelize, resnet18_graph,
-                        schedule, uniform_policy)
+                        gpt2_decode_graph, gpt2_graph, gpt2_prefill_graph,
+                        mlp_graph, parallelize, resnet18_graph, schedule,
+                        uniform_policy)
 from repro.core.checkpointing import apply_policy
 from repro.core.engine import sign_count
 from repro.core.fusion_search import fusion_partition
@@ -98,6 +101,25 @@ def _verify_degrade(label: str, tg, strategy, failed: int = 1) -> list:
     return findings
 
 
+def _verify_serving(label: str, hda, engine, tiny: dict) -> list:
+    """Inference-serving leg: M-series conservation (incl. M025 KV rules)
+    on prefill and decode graphs, resident and paged, plus the scheduled
+    decode step through verify_result."""
+    findings = []
+    graphs = {
+        "prefill": gpt2_prefill_graph(batch=1, seq=64, **tiny),
+        "decode": gpt2_decode_graph(batch=4, past=64, **tiny),
+        "decode-paged": gpt2_decode_graph(batch=4, past=64, kv_paged=True,
+                                          **tiny),
+    }
+    for name, g in graphs.items():
+        res = schedule(g, hda, engine=engine)
+        fs = verify_result(g, hda, result=res, engine=engine, strict=False)
+        print(f"  {label} serve {name}: {len(fs)} finding(s)")
+        findings += fs
+    return findings
+
+
 def main(argv: list | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.verify",
                                  description=__doc__.splitlines()[0])
@@ -133,6 +155,9 @@ def main(argv: list | None = None) -> int:
                                      ParallelStrategy(2, 2, 2, microbatches=4))
         findings += _verify_degrade(name, tg,
                                     ParallelStrategy(2, 2, 2, microbatches=4))
+    findings += _verify_serving(
+        "gpt2-tiny", hda, engine,
+        dict(d_model=128, n_layers=2, n_heads=4, vocab=512))
 
     if findings:
         print(f"\n{len(findings)} finding(s):")

@@ -315,6 +315,26 @@ def test_schedule_batch_fork_pool_parity(mlp_tg, hda):
         assert a.per_core_busy == b.per_core_busy
 
 
+def test_schedule_batch_decode_graphs_parity(hda):
+    """Serving decode graphs (ISSUE 10) through ``schedule_batch`` are
+    bit-identical to one-at-a-time ``schedule`` — resident and KV-paged,
+    including the kv_cache breakdown and the one-way paging spill."""
+    from repro.core import gpt2_decode_graph, gpt2_prefill_graph
+    from repro.core.scheduling import schedule, schedule_batch
+    tiny = dict(d_model=64, n_layers=2, n_heads=4, vocab=256)
+    graphs = [gpt2_prefill_graph(batch=1, seq=64, **tiny),
+              gpt2_decode_graph(batch=4, past=64, **tiny),
+              gpt2_decode_graph(batch=4, past=64, kv_paged=True, **tiny)]
+    eng = get_engine(hda)
+    jobs = [(g, hda, [(n,) for n in g.topo_order()]) for g in graphs]
+    batched = schedule_batch(jobs, engine=eng)
+    for (g, _, part), a in zip(jobs, batched, strict=True):
+        b = schedule(g, hda, part, engine=eng)
+        assert (a.latency, a.energy, a.peak_mem, a.spill_bytes) == \
+            (b.latency, b.energy, b.peak_mem, b.spill_bytes)
+        assert a.mem_breakdown == b.mem_breakdown
+
+
 # ---------------------------------------------------------------------------
 # C-rule cleanliness: the batched GA under the sanitizer
 # ---------------------------------------------------------------------------

@@ -65,6 +65,11 @@ EXPECTED = {
     "nearest_strategy", "ResiliencePoint", "sweep_resilience",
     "FAULTS", "FaultSpec", "InjectionReport", "inject", "run_campaign",
     "load_snapshot", "save_snapshot",
+    # inference serving (KV-cache-aware continuous batching)
+    "DEFAULT_MIX", "GPT2_SMALL", "RequestClass", "RequestMix", "ServeResult",
+    "evaluate_serve", "kv_bytes_per_token", "max_keep_slots",
+    "ServePoint", "sweep_serve",
+    "gpt2_prefill_graph", "gpt2_decode_graph",
 }
 
 

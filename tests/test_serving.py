@@ -1,0 +1,308 @@
+"""Inference-serving axis (ISSUE 10): KV-cache-aware prefill/decode graphs,
+continuous-batching evaluation, and the serving DSE sweep.
+
+Covers: kv-kind tensors landing in the ``kv_cache`` memory category, the
+M-series KV-conservation rules (M025) on clean and broken graphs,
+engine-vs-reference lifetime parity on decode graphs (resident and paged),
+the KEEP / RECOMPUTE / OFFLOAD policy semantics (footprints, one-way KV
+paging through ``spill_bytes``, capacity-thrash infeasibility),
+``sweep_serve`` fronts across cluster sizes including the
+OFFLOAD-dominates-KEEP acceptance cell, the sanitizer contract on the
+serving path, and the examples/serve_lm.py artifact end to end.
+"""
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+from repro.core import (ActivationPolicy, DEFAULT_MIX, GPT2_SMALL,
+                        RequestClass, RequestMix, edge_cluster,
+                        datacenter_cluster, evaluate_serve, get_engine,
+                        gpt2_decode_graph, gpt2_prefill_graph,
+                        kv_bytes_per_token, max_keep_slots, pareto_front,
+                        schedule, sweep_serve, tensor_category, verify_graph)
+from repro.core import GraphBuilder
+from repro.core.memory import KV_CACHE
+from repro.core.serving import _bucket
+
+TINY = dict(d_model=64, n_layers=2, n_heads=4, vocab=256)
+
+
+@pytest.fixture(scope="module")
+def hda():
+    return edge_cluster(1).chip
+
+
+# ---------------------------------------------------------------------------
+# kv tensor category + graph structure
+# ---------------------------------------------------------------------------
+
+
+def test_kv_nodes_classify_as_kv_cache():
+    g = gpt2_decode_graph(batch=2, past=32, **TINY)
+    kv_tensors = [nd.outputs[0] for nd in g.nodes.values()
+                  if nd.kind == "kv" and nd.outputs]
+    assert kv_tensors, "decode graph has no kv-kind producers"
+    for t in kv_tensors:
+        assert tensor_category(g, t) == KV_CACHE
+    # non-kv tensors never land in the category
+    other = [nd.outputs[0] for nd in g.nodes.values()
+             if nd.kind != "kv" and nd.outputs]
+    assert all(tensor_category(g, t) != KV_CACHE for t in other)
+
+
+def test_decode_graph_shapes_and_memo():
+    g = gpt2_decode_graph(batch=4, past=64, **TINY)
+    g2 = gpt2_decode_graph(batch=4, past=64, **TINY)
+    # memoized master: repeat construction is a copy, not a rebuild
+    assert list(g2.nodes) == list(g.nodes)
+    assert g2.tensors.keys() == g.tensors.keys()
+    # appended caches carry past+1 positions
+    appends = [nd for nd in g.nodes.values()
+               if nd.op == "concat" and nd.kind == "kv"]
+    assert len(appends) == 2 * TINY["n_layers"]
+    for nd in appends:
+        assert g.tensors[nd.outputs[0]].shape[2] == 65
+
+
+def test_prefill_decode_verify_clean(hda):
+    for g in (gpt2_prefill_graph(batch=1, seq=64, **TINY),
+              gpt2_decode_graph(batch=4, past=64, **TINY),
+              gpt2_decode_graph(batch=4, past=64, kv_paged=True, **TINY),
+              gpt2_decode_graph(batch=2, past=32, tp=2, **TINY)):
+        assert verify_graph(g) == []
+
+
+def test_m025_fires_on_broken_kv_append():
+    b = GraphBuilder("broken_kv")
+    x = b.input("x", (2, 4, 1, 16), "bfloat16")
+    cache = b.kv_input("kc", (2, 4, 32, 16))
+    ka = b.kv_append(cache, x, name="cat")
+    b.g.nodes["cat"].dims["N"] = 1           # corrupt the element count
+    b.kv_commit([ka])
+    findings = verify_graph(b.g)
+    assert any(f.rule == "M025" for f in findings), findings
+
+
+def test_m025_fires_on_dead_kv_read():
+    b = GraphBuilder("dead_kv")
+    b.kv_input("kc", (2, 4, 32, 16))          # sourced, never consumed
+    findings = verify_graph(b.g)
+    assert any(f.rule == "M025" for f in findings), findings
+
+
+# ---------------------------------------------------------------------------
+# engine-vs-reference lifetime parity on decode graphs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_decode_engine_matches_reference(hda, paged):
+    g = gpt2_decode_graph(batch=4, past=64, kv_paged=paged, **TINY)
+    res = schedule(g, hda, engine=get_engine(hda))
+    ref = schedule(g, hda, use_engine=False)
+    assert res.latency == ref.latency
+    assert res.energy == ref.energy
+    assert res.peak_mem == ref.peak_mem
+    assert res.mem_breakdown == ref.mem_breakdown
+    assert res.spill_bytes == ref.spill_bytes
+    assert res.mem_breakdown.get(KV_CACHE, 0) > 0
+
+
+def test_paged_decode_spills_kv_one_way(hda):
+    """OFFLOAD decode pages caches in (kv_load) and new blocks out
+    (kv_store) over dma — spill_bytes counts both, and the resident peak
+    drops versus KEEP."""
+    keep = schedule(gpt2_decode_graph(batch=4, past=256, **TINY), hda)
+    paged = schedule(gpt2_decode_graph(batch=4, past=256, kv_paged=True,
+                                       **TINY), hda)
+    assert keep.spill_bytes == 0
+    assert paged.spill_bytes > 0
+    assert paged.peak_mem < keep.peak_mem
+    assert paged.mem_breakdown.get(KV_CACHE, 0) \
+        < keep.mem_breakdown.get(KV_CACHE, 0)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching evaluation: policy semantics
+# ---------------------------------------------------------------------------
+
+
+def test_request_mix_validation():
+    with pytest.raises(ValueError):
+        RequestClass("bad", prompt=0, decode=8)
+    with pytest.raises(ValueError):
+        RequestMix(())
+    assert abs(sum(DEFAULT_MIX.weights) - 1.0) < 1e-12
+    assert RequestClass("c", prompt=128, decode=64).steady_ctx == 160
+
+
+def test_bucket_powers_of_two():
+    assert _bucket(1) == 16
+    assert _bucket(129) == 256
+    assert _bucket(256) == 256
+
+
+def test_kv_bytes_per_token_sharding():
+    full = kv_bytes_per_token()
+    assert full == 2 * GPT2_SMALL["n_layers"] * GPT2_SMALL["d_model"] * 2
+    assert kv_bytes_per_token(n_chips=4) == full // 4
+
+
+def test_policy_semantics_small_cluster():
+    cluster = edge_cluster(1)
+    eng = get_engine(cluster.chip)
+    res = {p: evaluate_serve(cluster, slots=4, policy=p, model=TINY,
+                             engine=eng)
+           for p in ActivationPolicy}
+    keep, rec, off = (res[ActivationPolicy.KEEP],
+                      res[ActivationPolicy.RECOMPUTE],
+                      res[ActivationPolicy.OFFLOAD])
+    # when everything fits, resident caches are never slower than paging
+    assert keep.feasible
+    assert keep.rps >= off.rps
+    # OFFLOAD strictly reduces the resident KV footprint (the overall peak
+    # may still be set by the shared prefill phase on a tiny model)
+    assert off.peak_mem <= keep.peak_mem
+    assert off.kv_bytes < keep.kv_bytes
+    # RECOMPUTE holds no cache and pays quadratic compute
+    assert rec.kv_bytes == 0
+    assert rec.rps < keep.rps
+    # power follows throughput x energy-per-request; all positive and finite
+    for r in res.values():
+        assert r.watts > 0 and r.tokens_per_joule > 0
+        assert r.p99_ms >= r.p50_ms > 0
+
+
+def test_keep_thrashes_over_capacity():
+    """Past the per-chip capacity the KEEP step pays un-overlapped forced
+    paging and the cell is marked infeasible — the regime OFFLOAD avoids."""
+    cluster = edge_cluster(1, mem_mb=8.0)
+    eng = get_engine(cluster.chip)
+    keep = evaluate_serve(cluster, slots=64, policy=ActivationPolicy.KEEP,
+                          engine=eng)
+    off = evaluate_serve(cluster, slots=64, policy=ActivationPolicy.OFFLOAD,
+                         engine=eng)
+    assert not keep.feasible
+    assert off.peak_mem < keep.peak_mem
+    assert off.rps > keep.rps          # paging beats thrashing
+
+
+def test_evaluate_serve_rejects_bad_tp():
+    with pytest.raises(ValueError):
+        evaluate_serve(edge_cluster(5), slots=4)   # 5 does not divide 12
+    with pytest.raises(ValueError):
+        evaluate_serve(edge_cluster(1), slots=0)
+
+
+def test_max_keep_slots_consistent():
+    cluster = edge_cluster(4)
+    n = max_keep_slots(cluster, ctx=512)
+    assert n > 0
+    # the ceiling scales inversely with context length
+    assert max_keep_slots(cluster, ctx=1024) <= n
+
+
+# ---------------------------------------------------------------------------
+# sweep_serve: fronts across cluster sizes
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def edge_points():
+    return sweep_serve(edge_cluster, [1, 4], slots_list=(4, 64))
+
+
+def test_sweep_serve_covers_grid(edge_points):
+    # 2 chip counts x 2 slot counts x 3 policies, no cell skipped
+    assert len(edge_points) == 12
+    assert {p.n_chips for p in edge_points} == {1, 4}
+    assert {p.policy for p in edge_points} == \
+        {"KEEP", "RECOMPUTE", "OFFLOAD"}
+
+
+def test_sweep_serve_front_spans_cluster_sizes(edge_points):
+    front = pareto_front(edge_points, (lambda p: -p.result.rps,
+                                       lambda p: p.result.p99_ms,
+                                       lambda p: p.result.peak_mem,
+                                       lambda p: p.result.watts))
+    assert len(front) >= 2
+    assert {p.n_chips for p in front} == {1, 4}
+
+
+def test_offload_dominates_keep_at_scale(edge_points):
+    """The acceptance cell: at high slots x ctx the KEEP footprint blows
+    the edge capacity and OFFLOAD dominates it outright (better or equal
+    on rps, p99 and peak memory, strictly better somewhere)."""
+    cells = {(p.n_chips, p.slots, p.policy): p.result for p in edge_points}
+    dominated = 0
+    for (chips, slots) in [(1, 64), (4, 64)]:
+        keep = cells[(chips, slots, "KEEP")]
+        off = cells[(chips, slots, "OFFLOAD")]
+        if (off.rps >= keep.rps and off.p99_ms <= keep.p99_ms
+                and off.peak_mem < keep.peak_mem):
+            dominated += 1
+            assert not keep.feasible and off.feasible
+    assert dominated >= 1, "OFFLOAD never dominated KEEP at 64 slots"
+
+
+def test_sweep_serve_skips_invalid_tp_cells():
+    pts = sweep_serve(edge_cluster, [5], slots_list=(4,))
+    assert pts == []                   # 5 does not divide n_heads=12
+
+
+# ---------------------------------------------------------------------------
+# sanitizer contract on the serving path
+# ---------------------------------------------------------------------------
+
+
+def test_serving_clean_under_sanitizer(monkeypatch):
+    cluster = edge_cluster(1)
+    eng = get_engine(cluster.chip)
+    clean = {p: evaluate_serve(cluster, slots=4, policy=p, model=TINY,
+                               engine=eng).as_row()
+             for p in ActivationPolicy}
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    # shadow verification raises on any violation; identical figures
+    # certify the serving path's cache coherence
+    for p in ActivationPolicy:
+        assert evaluate_serve(cluster, slots=4, policy=p, model=TINY,
+                              engine=eng).as_row() == clean[p]
+
+
+# ---------------------------------------------------------------------------
+# examples/serve_lm.py end to end
+# ---------------------------------------------------------------------------
+
+
+def test_serve_lm_example_writes_pareto_csv(tmp_path, monkeypatch, capsys):
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "serve_lm.py")
+    spec = importlib.util.spec_from_file_location("serve_lm_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    out = tmp_path / "serve_pareto.csv"
+    monkeypatch.setattr(sys, "argv", ["serve_lm.py", "--chips", "1", "4",
+                                      "--slots", "4", "64",
+                                      "--out", str(out)])
+    mod.main()
+    text = capsys.readouterr().out
+    assert "front" in text and "best tokens/J" in text
+    import csv
+    with open(out) as f:
+        rows = list(csv.DictReader(f))
+    assert len(rows) == 24             # 2 sites x 2 chips x 2 slots x 3 pol
+    assert {r["site"] for r in rows} == {"edge", "datacenter"}
+    assert {r["policy"] for r in rows} == {"KEEP", "RECOMPUTE", "OFFLOAD"}
+    for r in rows:
+        assert float(r["rps"]) > 0
+
+
+def test_launch_serve_cli(capsys):
+    from repro.launch.serve import main as serve_main
+    assert serve_main(["--site", "edge", "--chips", "4", "--slots", "4",
+                       "--policy", "offload"]) == 0
+    out = capsys.readouterr().out
+    assert "throughput" in out and "tok/J" in out and "max KEEP slots" in out
